@@ -1,0 +1,26 @@
+"""Shared benchmark helpers."""
+from __future__ import annotations
+
+import time
+from typing import Callable, List
+
+
+def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+              **kw) -> float:
+    """Median wall-time of fn in microseconds."""
+    import jax
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    times = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        times.append(time.perf_counter() - t0)
+    times.sort()
+    return times[len(times) // 2] * 1e6
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line, flush=True)
+    return line

@@ -1,0 +1,26 @@
+"""Fig 11: request-latency distribution vs the fairness parameter λ."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.simulator import EngineSpec, Simulator
+from repro.data.workloads import post_recommendation
+
+ARCH = "llama3.1-8b"
+
+
+def run(emit):
+    cfg = get_config(ARCH)
+    trace = post_recommendation(qps=3.0, seed=5)
+    rows = []
+    for lam in (0.0, 0.02, 0.05, 0.2, 1.0):
+        spec = EngineSpec(f"po_lam{lam}", "srjf_calibrated", lam=lam)
+        sim = Simulator(cfg, spec, total_chips=2, weight_bytes_per_param=1.0,
+                        user_mil=trace.max_len)
+        r = sim.run(list(trace.requests), 3.0)
+        emit(f"fairness/lam{lam}", r.mean_latency * 1e6,
+             f"p50={r.p50_latency:.2f}s p99={r.p99_latency:.2f}s "
+             f"hit={r.hit_rate:.2f}")
+        rows.append((lam, r.mean_latency, r.p99_latency))
+    return rows

@@ -1,0 +1,34 @@
+"""Fig 8 analog: interconnect-bandwidth sensitivity of TP vs PrefillOnly.
+
+The paper contrasts NVLink vs PCIe for the TP-2 baseline on credit
+verification; our analog is full-ICI (50 GB/s/link) vs a DCN-attached slice
+(6.25 GB/s). PrefillOnly doesn't parallelize inference, so its throughput is
+interconnect-independent — the paper's punchline.
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.simulator import Simulator, paper_engines
+from repro.data.workloads import credit_verification
+from repro.runtime.hw import TPU_V5E, TPU_V5E_SLOW_LINKS
+
+ARCH = "llama3.1-8b"
+
+
+def run(emit):
+    cfg = get_config(ARCH)
+    trace = credit_verification(qps=10_000.0, seed=3)   # saturation mode
+    rows = {}
+    for chip in (TPU_V5E, TPU_V5E_SLOW_LINKS):
+        for spec in paper_engines():
+            if spec.name not in ("prefillonly", "tensor_parallel",
+                                 "pipeline_parallel"):
+                continue
+            sim = Simulator(cfg, spec, total_chips=2, chip=chip,
+                            weight_bytes_per_param=1.0,
+                            user_mil=trace.max_len)
+            r = sim.run(list(trace.requests), 10_000.0)
+            emit(f"interconnect/{chip.name}/{spec.name}", 0.0,
+                 f"thr={r.throughput:.3f}rps")
+            rows[(chip.name, spec.name)] = r.throughput
+    return rows

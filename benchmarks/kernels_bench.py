@@ -1,0 +1,60 @@
+"""Kernel micro-benchmarks (CPU host): wall-time of the pure-JAX oracles and
+scheduler-path overheads. Pallas kernels run in interpret mode on this host,
+so their wall-time is not meaningful — the TPU-side performance story lives
+in the dry-run roofline (§Roofline); here we track the host-visible costs
+that DO matter at serving time: scheduling decision latency and cache ops.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import time_call
+from repro.core.jct import LinearProxyJCT
+from repro.core.prefix_cache import PrefixCache, token_chain
+from repro.core.scheduler import Request, Scheduler
+from repro.models.layers import blocked_attention
+from repro.kernels import ref
+
+
+def run(emit):
+    ks = jax.random.split(jax.random.PRNGKey(0), 6)
+    # model-layer attention oracle (jit'd)
+    q = jax.random.normal(ks[0], (1, 512, 8, 64), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 512, 4, 64), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 512, 4, 64), jnp.bfloat16)
+    fa = jax.jit(lambda q, k, v: blocked_attention(q, k, v, q_block=128,
+                                                   kv_block=128))
+    emit("kernels/blocked_attention_512", time_call(fa, q, k, v),
+         "B1 S512 H8 KV4 d64 bf16 (host CPU)")
+
+    x = jax.random.normal(ks[3], (512, 256), jnp.bfloat16)
+    wg = jax.random.normal(ks[4], (256, 1024), jnp.bfloat16) * 0.05
+    wd = jax.random.normal(ks[5], (1024, 256), jnp.bfloat16) * 0.05
+    mlp = jax.jit(lambda x: ref.fused_mlp_ref(x, wg, wg, wd))
+    emit("kernels/swiglu_mlp_512x256", time_call(mlp, x),
+         "T512 D256 F1024 bf16 (host CPU)")
+
+    # scheduling decision latency at queue depth 256 (Algorithm 1 inner loop)
+    cache = PrefixCache(4096, 16)
+    rng = np.random.default_rng(0)
+    queue = []
+    for i in range(256):
+        toks = rng.integers(0, 1000, size=rng.integers(500, 15_000)).tolist()
+        queue.append(Request(n_input=len(toks), arrival=float(i),
+                             chain=token_chain(toks, 16), user_id=f"u{i}"))
+    sched = Scheduler("srjf_calibrated", LinearProxyJCT(a=1e-4), lam=0.05)
+    import time as _t
+    t0 = _t.perf_counter()
+    for _ in range(20):
+        sched.pick(queue, cache, now=300.0)
+    emit("scheduler/pick_depth256", (_t.perf_counter() - t0) / 20 * 1e6,
+         "continuous JCT calibration over 256 waiting requests")
+
+    chain = queue[0].chain
+    t0 = _t.perf_counter()
+    for _ in range(200):
+        cache.insert(chain, len(chain) * 16, now=1.0)
+    emit("prefix_cache/insert_long", (_t.perf_counter() - t0) / 200 * 1e6,
+         f"{len(chain)} blocks")

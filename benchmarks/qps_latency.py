@@ -1,0 +1,47 @@
+"""Fig 6 + Fig 7: QPS vs mean / P99 latency, 5 engines x 2 workloads.
+
+Paper methodology (§7.2): find PrefillOnly's saturation throughput x by
+pouring in all requests at once, then evaluate QPS in {x/4, x/2, x, 2x, 3x,
+4x}. TPU v5e instances, fp8 weights (the paper's quantized middle-end setup).
+"""
+from __future__ import annotations
+
+from repro.configs import get_config
+from repro.core.simulator import Simulator, paper_engines
+from repro.data.workloads import get_trace
+
+ARCH = "llama3.1-8b"
+CHIPS = 2
+
+
+def saturation_qps(trace_name: str) -> float:
+    cfg = get_config(ARCH)
+    spec = [s for s in paper_engines() if s.name == "prefillonly"][0]
+    trace = get_trace(trace_name, qps=10_000.0, seed=0)   # all-at-once
+    sim = Simulator(cfg, spec, total_chips=CHIPS, weight_bytes_per_param=1.0,
+                    user_mil=trace.max_len)
+    res = sim.run(list(trace.requests), 10_000.0)
+    return res.throughput
+
+
+def run(emit):
+    cfg = get_config(ARCH)
+    out = []
+    for trace_name in ("post_recommendation", "credit_verification"):
+        x = saturation_qps(trace_name)
+        emit(f"qps_latency/{trace_name}/saturation", 0.0, f"x={x:.3f}rps")
+        for mult in (0.25, 0.5, 1.0, 2.0, 3.0, 4.0):
+            qps = x * mult
+            trace = get_trace(trace_name, qps=qps, seed=1)
+            for spec in paper_engines():
+                sim = Simulator(cfg, spec, total_chips=CHIPS,
+                                weight_bytes_per_param=1.0,
+                                user_mil=trace.max_len)
+                r = sim.run(list(trace.requests), qps)
+                emit(f"qps_latency/{trace_name}/{spec.name}/q{mult}x",
+                     r.mean_latency * 1e6,
+                     f"p99={r.p99_latency:.2f}s thr={r.throughput:.3f}rps "
+                     f"hit={r.hit_rate:.2f} rej={r.rejected}")
+                out.append((trace_name, mult, spec.name, r))
+    # headline check: PrefillOnly sustains the highest load
+    return out

@@ -1,0 +1,76 @@
+"""Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
+results/dryrun/*.json.
+
+    PYTHONPATH=src python -m benchmarks.report [--tag baseline]
+"""
+from __future__ import annotations
+
+import argparse
+from collections import defaultdict
+
+from benchmarks.roofline import fraction, load_cells
+
+
+def fmt_bytes(b):
+    return f"{b / 2**30:.2f}"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+    cells = load_cells(args.tag)
+    by_key = {(c["arch"], c["shape"], c["mesh"]): c for c in cells}
+    archs = sorted({c["arch"] for c in cells})
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+    print("### Dry-run table (per device, single pod 16x16 unless noted)\n")
+    print("| arch | shape | mesh | status | peak GiB | fits | flops/dev | "
+          "coll GB/dev | collectives |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for arch in archs:
+        for shape in shapes:
+            for mesh in ("pod16x16", "pod2x16x16"):
+                c = by_key.get((arch, shape, mesh))
+                if c is None:
+                    continue
+                if c["status"] != "ok":
+                    print(f"| {arch} | {shape} | {mesh} | SKIP | — | — | — | "
+                          f"— | — |")
+                    continue
+                m, h = c["memory"], c["hlo"]
+                kinds = ",".join(f"{k.split('-')[-1]}"
+                                 for k in sorted(h["collective_by_kind"]))
+                print(f"| {arch} | {shape} | {mesh} | ok | "
+                      f"{fmt_bytes(m['peak_per_device'])} | "
+                      f"{'Y' if m['fits'] else 'N'} | "
+                      f"{h['flops']:.2e} | "
+                      f"{h['collective_bytes']/1e9:.2f} | {kinds} |")
+
+    print("\n### Roofline table (single pod)\n")
+    print("| arch | shape | compute_s | memory_s | collective_s | dominant | "
+          "useful | fraction | note |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    worst = []
+    for arch in archs:
+        for shape in shapes:
+            c = by_key.get((arch, shape, "pod16x16"))
+            if c is None or c["status"] != "ok":
+                if c is not None:
+                    print(f"| {arch} | {shape} | — | — | — | — | — | — | "
+                          f"skipped (sub-quadratic rule) |")
+                continue
+            r = c["roofline"]
+            f = fraction(c)
+            worst.append((f, arch, shape, r["dominant"]))
+            print(f"| {arch} | {shape} | {r['compute_s']*1e3:.2f}ms | "
+                  f"{r['memory_s']*1e3:.2f}ms | {r['collective_s']*1e3:.2f}ms "
+                  f"| {r['dominant']} | {r['useful_ratio']:.2f} | {f:.3f} | "
+                  f"{r['suggestion'][:48]} |")
+    worst.sort()
+    print("\nworst fractions:",
+          ", ".join(f"{a}/{s}={f:.3f}({d})" for f, a, s, d in worst[:5]))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,69 @@
+"""§Roofline: the per-(arch x shape x mesh) table from the dry-run artifacts.
+
+Reads results/dryrun/*.json (produced by ``python -m repro.launch.dryrun``)
+and prints the three roofline terms, dominant bottleneck, MODEL_FLOPS /
+HLO_FLOPs ratio, and the roofline fraction:
+
+    fraction = ideal_time / bound_time
+    ideal    = max(MODEL_FLOPS/(chips·peak),  one-sweep HBM floor)
+    bound    = max(compute_s, memory_s, collective_s)
+
+The HBM floor (argument+output bytes / bw) is what makes decode cells
+meaningful: a decode step is ideally ONE sweep of weights+cache.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.runtime.hw import TPU_V5E
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "results/dryrun")
+
+
+def load_cells(tag: str = "baseline") -> List[Dict]:
+    cells = []
+    for f in sorted(glob.glob(f"{DRYRUN_DIR}/*__{tag}.json")):
+        cells.append(json.load(open(f)))
+    return cells
+
+
+def fraction(cell: Dict) -> float:
+    r = cell["roofline"]
+    m = cell["memory"]
+    chip = TPU_V5E
+    compute_ideal = r["model_flops"] / (cell["devices"]
+                                        * chip.peak_flops_bf16)
+    hbm_floor = (m["argument_bytes"] + m["output_bytes"]
+                 - m["alias_bytes"]) / chip.hbm_bw
+    ideal = max(compute_ideal, hbm_floor)
+    bound = max(r["compute_s"], r["memory_s"], r["collective_s"], 1e-12)
+    return min(1.0, ideal / bound)
+
+
+def run(emit, tag: str = "baseline"):
+    cells = load_cells(tag)
+    ok = [c for c in cells if c.get("status") == "ok"]
+    skipped = [c for c in cells if c.get("status") == "skip"]
+    rows = []
+    for c in ok:
+        r = c["roofline"]
+        frac = fraction(c)
+        name = f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}"
+        emit(name, r["step_time_bound_s"] * 1e6,
+             f"dom={r['dominant']} frac={frac:.3f} "
+             f"useful={r['useful_ratio']:.2f} "
+             f"comp={r['compute_s']*1e3:.2f}ms "
+             f"mem={r['memory_s']*1e3:.2f}ms "
+             f"coll={r['collective_s']*1e3:.2f}ms "
+             f"fits={c['memory']['fits']}")
+        rows.append((c["arch"], c["shape"], c["mesh"], frac, r["dominant"]))
+    for c in skipped:
+        emit(f"roofline/{c['arch']}/{c['shape']}/{c['mesh']}", 0.0, "SKIP")
+    if ok:
+        worst = sorted(rows, key=lambda x: x[3])[:3]
+        emit("roofline/worst3", 0.0,
+             " | ".join(f"{a}/{s}/{m}={f:.3f}" for a, s, m, f, _ in worst))
+    return rows

@@ -1,0 +1,56 @@
+# One function per paper table. Print ``name,us_per_call,derived`` CSV.
+"""Benchmark orchestrator — one module per paper table/figure:
+
+  mil_table      Table 2   MIL per technique (+ WL feasibility)
+  qps_latency    Fig 6/7   QPS vs mean & P99 latency, 5 engines x 2 workloads
+  throughput     Fig 9     delivered throughput vs offered QPS
+  interconnect   Fig 8     ICI-bandwidth sensitivity of TP vs PrefillOnly
+  mil_ablation   Fig 10    hybrid prefilling MIL ablation
+  fairness       Fig 11    λ sweep (mean/p50/p99)
+  jct_fit        §6.3      JCT linear-proxy Pearson r (analytic + measured)
+  kernels_bench  —         host-side micro-benchmarks (scheduler, cache, oracles)
+  roofline       §Roofline dry-run derived terms (reads results/dryrun/*.json)
+
+Run everything:   PYTHONPATH=src python -m benchmarks.run
+Run a subset:     PYTHONPATH=src python -m benchmarks.run --only mil_table,fairness
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks.common import emit
+
+MODULES = ["mil_table", "qps_latency", "throughput", "interconnect",
+           "mil_ablation", "fairness", "jct_fit", "kernels_bench",
+           "roofline"]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="",
+                    help="comma-separated subset of benchmark modules")
+    args = ap.parse_args()
+    selected = [m for m in args.only.split(",") if m] or MODULES
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for name in selected:
+        mod = __import__(f"benchmarks.{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            mod.run(emit)
+            emit(f"_section/{name}", (time.time() - t0) * 1e6, "ok")
+        except Exception as e:  # keep going; report at the end
+            traceback.print_exc()
+            emit(f"_section/{name}", (time.time() - t0) * 1e6,
+                 f"FAILED {e!r}")
+            failures += 1
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

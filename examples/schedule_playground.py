@@ -1,0 +1,56 @@
+"""The paper's §6.2/§6.3 A/B/C/D scheduling example, step by step.
+
+Shows why continuous JCT calibration gets 2 cache hits where FIFO and naive
+SRJF get 1. Pure scheduling logic — no model needed.
+
+    PYTHONPATH=src python examples/schedule_playground.py
+"""
+from repro.core.jct import LinearProxyJCT
+from repro.core.prefix_cache import PrefixCache, token_chain
+from repro.core.scheduler import Request, Scheduler
+
+BLOCK = 4
+
+
+def make_requests():
+    P1 = list(range(100, 140))           # profile shared by A and D
+    P2 = list(range(200, 248))           # profile shared by B and C
+    mk = lambda toks, t, u: Request(n_input=len(toks), arrival=t,
+                                    chain=token_chain(toks, BLOCK),
+                                    tokens=toks, user_id=u)
+    return [mk(P1 + [1] * 4, 0.000, "A"),    # 44 tokens (shortest)
+            mk(P2 + [3] * 12, 0.001, "B"),   # 60
+            mk(P2 + [2] * 4, 0.002, "C"),    # 52
+            mk(P1 + [4] * 24, 0.003, "D")]   # 64 (longest)
+
+
+def run(policy: str):
+    cache = PrefixCache(60 // BLOCK, BLOCK)   # ~one request of space
+    sched = Scheduler(policy, LinearProxyJCT(a=1.0, b=0.0), lam=0.0)
+    q = make_requests()
+    for r in q:
+        r.n_cached_at_arrival = cache.match_len(r.chain)
+    print(f"\n--- {policy} ---")
+    now, hits = 0.0, 0
+    while q:
+        i = sched.pick(q, cache, now)
+        r = q.pop(i)
+        cached = cache.match_len(r.chain, now, touch=True)
+        hits += cached > 0
+        print(f"  t={now:.0f} run {r.user_id} ({r.n_input} tokens, "
+              f"{cached} cached -> {r.n_input - cached} to prefill)")
+        cache.insert(r.chain, r.n_input, now=now)
+        now += 1
+    print(f"  => {hits} cache hit(s)")
+    return hits
+
+
+if __name__ == "__main__":
+    print("Requests: A=44tok, C=52, B=60, D=64; A/D share a 40-token "
+          "profile, B/C share a 48-token one.\nCache holds ~one request.")
+    h_fifo = run("fifo")
+    h_srjf = run("srjf")
+    h_cal = run("srjf_calibrated")
+    print(f"\nFIFO: {h_fifo} hit(s), naive SRJF: {h_srjf} hit(s), "
+          f"PrefillOnly (continuous calibration): {h_cal} hits — "
+          "matches the paper's Figure 5.")

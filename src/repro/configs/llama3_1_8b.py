@@ -1,0 +1,19 @@
+"""llama3.1-8b [dense] — the paper's own evaluation model (Table 3, low-end row).
+
+[arXiv:2407.21783; hf:meta-llama/Llama-3.1-8B] Not part of the assigned 10;
+included because the paper's MIL/JCT numbers are reported on it.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="llama3.1-8b",
+    family="dense",
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14_336,
+    vocab_size=128_256,
+    rope_theta=500_000.0,
+    tie_embeddings=False,
+)

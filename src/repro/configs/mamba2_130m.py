@@ -1,0 +1,23 @@
+"""mamba2-130m [ssm] — SSD (state-space duality), attention-free.
+
+[arXiv:2405.21060] d_inner = 2*768 = 1536, headdim 64 -> 24 SSD heads,
+state N=128. No KV cache exists; PrefillOnly's suffix-KV-discard is
+inapplicable (see DESIGN.md §Arch-applicability) — the per-layer SSM state is
+O(1) and doubles as the "prefix cache" via state checkpoints.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-130m",
+    family="ssm",
+    num_layers=24,
+    d_model=768,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=50_280,
+    ssm_state=128,
+    ssm_expand=2,
+    ssm_headdim=64,
+    tie_embeddings=True,
+)

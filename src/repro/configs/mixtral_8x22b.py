@@ -1,0 +1,22 @@
+"""mixtral-8x22b [moe] — 8 experts top-2, sliding-window attention.
+
+[arXiv:2401.04088; hf] All layers MoE. SWA on every layer bounds the KV
+working set -> long_500k decode runs (KV = window).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x22b",
+    family="moe",
+    num_layers=56,
+    d_model=6144,
+    num_heads=48,
+    num_kv_heads=8,
+    d_ff=16_384,
+    vocab_size=32_768,
+    sliding_window=4096,
+    num_experts=8,
+    num_experts_per_tok=2,
+    rope_theta=1_000_000.0,
+    tie_embeddings=False,
+)

@@ -1,0 +1,23 @@
+"""zamba2-2.7b [hybrid] — Mamba2 backbone + shared attention blocks.
+
+[arXiv:2411.15242; hf] 54 Mamba2 layers; a single shared attention+MLP block
+(one weight set) is applied every ``attn_every`` layers (9 applications).
+ssm_state=64 per assignment.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-2.7b",
+    family="hybrid",
+    num_layers=54,
+    d_model=2560,
+    num_heads=32,
+    num_kv_heads=32,
+    d_ff=10_240,
+    vocab_size=32_000,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_headdim=64,
+    attn_every=6,
+    tie_embeddings=True,
+)

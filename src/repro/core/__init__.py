@@ -1,0 +1,17 @@
+"""PrefillOnly core: the paper's contribution as composable modules.
+
+  hybrid_prefill — §4  chunked non-attention execution (+ chunked LM loss)
+  kv_policy      — §3.1/§5 memory model, MIL, prefix-KV budget
+  prefix_cache   — §5  block-hash radix cache w/ LRU-leaf eviction
+  jct            — §6.3 JCT models (linear proxy / grid fit / roofline)
+  scheduler      — §6  Algorithm 1 (SRJF + continuous calibration), baselines
+  engine         — §3  the real-compute serving loop
+  simulator      — §7  discrete-event reproduction of the evaluation
+"""
+from repro.core.hybrid_prefill import (  # noqa: F401
+    chunked_map, chunked_softmax_xent, last_token_logits)
+from repro.core.jct import (  # noqa: F401
+    GridJCT, LinearProxyJCT, RooflineJCT, pearson, tp_comm_bytes_per_token)
+from repro.core.kv_policy import MemoryModel  # noqa: F401
+from repro.core.prefix_cache import PrefixCache, token_chain  # noqa: F401
+from repro.core.scheduler import Request, Scheduler  # noqa: F401

@@ -1,0 +1,232 @@
+"""PrefillOnly engine — the real-compute serving loop (paper §3).
+
+Workflow (Figure 2):
+  profile run   -> JCT model fit + prefix-KV budget (kv_policy / measured)
+  submit()      -> tokenize-equivalent: hash-chain the request, enqueue
+  step()        -> Algorithm 1 pick (continuous JCT calibration) ->
+                   hybrid prefill (cache-hit suffix path when possible) ->
+                   suffix-KV discard into the block cache -> constrained
+                   single-token output (the paper's P(Yes)/P(No) scoring)
+
+This engine runs REAL forwards (CPU-scale models in tests/examples; the same
+code drives a TPU instance mesh via launch/serve.py). Shapes are bucketed so
+jit compiles a bounded set of programs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.jct import LinearProxyJCT, Sample
+from repro.core.prefix_cache import PrefixCache, token_chain
+from repro.core.scheduler import Request, Scheduler
+from repro.models import transformer as tfm
+from repro.models.model import cast_params
+
+
+def _bucket(n: int, sizes: Sequence[int]) -> int:
+    for s in sizes:
+        if n <= s:
+            return s
+    return sizes[-1]
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    policy: str = "srjf_calibrated"
+    lam: float = 0.05                 # starvation offset (JCT-sec per wait-sec)
+    block_size: int = 16
+    cache_capacity_tokens: int = 4096  # prefix-KV budget (profile run output)
+    kv_keep_tokens: int = 10**9        # suffix discard threshold (per request)
+    suffix_buckets: Tuple[int, ...] = (64, 128, 256, 512, 1024, 2048)
+    prefix_bucket_blocks: int = 4      # reuse granularity: 4 blocks = 64 tok
+
+
+class PrefillOnlyEngine:
+    """Single-instance engine over a dense-family model (real arrays)."""
+
+    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig = EngineConfig()):
+        assert cfg.family in ("dense", "vlm", "audio", "moe"), cfg.family
+        self.cfg = cfg
+        self.params = cast_params(params, cfg.dtype)
+        self.ecfg = ecfg
+        self.cache = PrefixCache(ecfg.cache_capacity_tokens // ecfg.block_size,
+                                 ecfg.block_size)
+        self.jct_model = LinearProxyJCT()
+        self.scheduler = Scheduler(ecfg.policy, self.jct_model, ecfg.lam)
+        self.queue: List[Request] = []
+        self.results: Dict[int, Dict] = {}
+        self._fresh_fns: Dict[Tuple[int, int], callable] = {}
+        self._suffix_fns: Dict[Tuple[int, int, int], callable] = {}
+        self.steps = 0
+        self.hit_tokens = 0
+        self.total_tokens = 0
+
+    # ---- profile run (paper §3.1) ------------------------------------------
+    def profile(self, lengths: Sequence[int] = (64, 128, 256, 512)) -> float:
+        """Measure jct(n_input, 0) on this host, fit the linear proxy."""
+        samples: List[Sample] = []
+        rng = np.random.default_rng(0)
+        for n in lengths:
+            toks = rng.integers(0, self.cfg.vocab_size, size=n).tolist()
+            self._run_fresh(toks)            # warm-up: exclude compile time
+            for _ in range(2):               # steady-state samples
+                t0 = time.perf_counter()
+                logits, _, _ = self._run_fresh(toks)
+                jax.block_until_ready(logits)
+                samples.append((n, 0, time.perf_counter() - t0))
+        self.jct_model.fit(samples)
+        return self.jct_model.pearson_r
+
+    # ---- request lifecycle ---------------------------------------------------
+    def submit(self, tokens: Sequence[int],
+               allowed_tokens: Optional[Sequence[int]] = None,
+               user_id: Optional[str] = None, now: Optional[float] = None) -> int:
+        now = time.perf_counter() if now is None else now
+        r = Request(n_input=len(tokens), arrival=now,
+                    chain=token_chain(tokens, self.ecfg.block_size),
+                    tokens=list(tokens), user_id=user_id,
+                    allowed_tokens=tuple(allowed_tokens) if allowed_tokens else None)
+        r.n_cached_at_arrival = self.cache.match_len(r.chain)
+        self.queue.append(r)
+        return r.req_id
+
+    def step(self) -> Optional[int]:
+        """One scheduling step: pick (Algorithm 1), prefill, cache, score."""
+        now = time.perf_counter()
+        i = self.scheduler.pick(self.queue, self.cache, now)
+        if i is None:
+            return None
+        r = self.queue.pop(i)
+        r.start_time = now
+        logits = self._execute(r)
+        r.finish_time = time.perf_counter()
+        self.results[r.req_id] = self._score(logits, r)
+        self.steps += 1
+        return r.req_id
+
+    def run_until_drained(self) -> List[int]:
+        done = []
+        while self.queue:
+            done.append(self.step())
+        return done
+
+    # ---- execution -----------------------------------------------------------
+    def _execute(self, r: Request) -> jax.Array:
+        bs = self.ecfg.block_size
+        matched_blocks = self.cache.match_blocks(r.chain, touch=True)
+        gran = self.ecfg.prefix_bucket_blocks
+        use_blocks = (matched_blocks // gran) * gran  # bucketed prefix reuse
+        prefix_len = use_blocks * bs
+        # never consume the whole request from cache — the last token's
+        # logits must be computed (ensure >=1 fresh token)
+        if prefix_len >= r.n_input:
+            prefix_len = max(0, ((r.n_input - 1) // (gran * bs)) * gran * bs)
+            use_blocks = prefix_len // bs
+        r.n_cached_at_start = prefix_len
+        self.hit_tokens += prefix_len
+        self.total_tokens += r.n_input
+
+        keep = min(r.n_input, self.ecfg.kv_keep_tokens)
+        if prefix_len == 0:
+            logits, new_kv, n_new = self._run_fresh(r.tokens, keep)
+            kv_from = 0
+        else:
+            self.cache.pin(r.chain, use_blocks)
+            payloads = self.cache.match_payloads(r.chain)[:use_blocks]
+            pk = jnp.concatenate([p[0] for p in payloads], axis=2)
+            pv = jnp.concatenate([p[1] for p in payloads], axis=2)
+            logits, new_kv, n_new = self._run_suffix(
+                r.tokens[prefix_len:], pk, pv, prefix_len, keep)
+            self.cache.unpin(r.chain, use_blocks)
+            kv_from = prefix_len
+        # split fresh KV into block payloads and insert (suffix discard:
+        # only up to ``keep`` tokens total)
+        n_insertable = max(0, min(keep, kv_from + n_new) - kv_from)
+        n_blocks_new = n_insertable // bs
+        payloads_all = self.cache.match_payloads(r.chain)[:use_blocks]
+        for b in range(n_blocks_new):
+            k_b = new_kv["k"][:, :, b * bs:(b + 1) * bs]
+            v_b = new_kv["v"][:, :, b * bs:(b + 1) * bs]
+            payloads_all.append((k_b, v_b))
+        self.cache.insert(r.chain, kv_from + n_blocks_new * bs,
+                          now=time.perf_counter(), payloads=payloads_all)
+        return logits
+
+    def _run_fresh(self, tokens: Sequence[int], keep: int = 0):
+        S = _bucket(len(tokens), self.ecfg.suffix_buckets)
+        keep_pad = min(keep, S)
+        key = (S, keep_pad)
+        if key not in self._fresh_fns:
+            cfg = self.cfg
+
+            @jax.jit
+            def fn(params, toks, last_index):
+                return tfm.prefill(params, cfg, {"tokens": toks},
+                                   kv_keep=keep_pad, last_index=last_index)
+
+            self._fresh_fns[key] = fn
+        toks = np.zeros((1, S), np.int32)
+        toks[0, :len(tokens)] = tokens
+        logits, kv = self._fresh_fns[key](
+            self.params, jnp.asarray(toks),
+            jnp.asarray([len(tokens) - 1], jnp.int32))
+        if kv is None:
+            return logits, {"k": None, "v": None}, 0
+        # kv: (L, 1, keep_pad, KV, hd); valid fresh tokens = len(tokens)
+        n_new = min(keep_pad, len(tokens))
+        return logits, kv, n_new
+
+    def _run_suffix(self, tokens, pk, pv, prefix_len: int, keep: int):
+        S = _bucket(len(tokens), self.ecfg.suffix_buckets)
+        P = pk.shape[2]
+        keep_new = max(0, min(keep, prefix_len + S) - prefix_len)
+        key = (S, P, keep_new)
+        if key not in self._suffix_fns:
+            cfg = self.cfg
+
+            @jax.jit
+            def fn(params, toks, pk, pv, last_index):
+                return tfm.prefill_with_prefix(
+                    params, cfg, {"tokens": toks}, {"k": pk, "v": pv},
+                    prefix_len=P, kv_keep=P + keep_new, last_index=last_index)
+
+            self._suffix_fns[key] = fn
+        toks = np.zeros((1, S), np.int32)
+        toks[0, :len(tokens)] = tokens
+        logits, kv = self._suffix_fns[key](
+            self.params, jnp.asarray(toks), pk, pv,
+            jnp.asarray([len(tokens) - 1], jnp.int32))
+        n_new = min(keep_new, len(tokens))
+        return logits, kv, n_new
+
+    # ---- output --------------------------------------------------------------
+    def _score(self, logits: jax.Array, r: Request) -> Dict:
+        """Constrained single-token output: renormalize over allowed ids
+        (paper §2.3 — P(Yes)/P(No) without fine-tuning)."""
+        out = {"req_id": r.req_id, "latency": r.latency,
+               "n_cached": r.n_cached_at_start, "n_input": r.n_input}
+        logits = np.asarray(logits[0], np.float64)
+        if r.allowed_tokens:
+            sub = logits[list(r.allowed_tokens)]
+            sub = np.exp(sub - sub.max())
+            sub /= sub.sum()
+            out["scores"] = {int(t): float(p)
+                             for t, p in zip(r.allowed_tokens, sub)}
+            out["token"] = int(r.allowed_tokens[int(np.argmax(sub))])
+        else:
+            out["token"] = int(np.argmax(logits))
+        return out
+
+    def stats(self) -> Dict:
+        return {
+            "steps": self.steps,
+            "hit_rate": self.hit_tokens / max(1, self.total_tokens),
+            "cache": self.cache.stats(),
+        }

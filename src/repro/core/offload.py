@@ -1,0 +1,150 @@
+"""Host-memory KV offload tier — paper §9 "Offloading the KV caches to CPU".
+
+The base engine DISCARDS suffix KV (and evicted prefix blocks) outright.
+This tier gives the cache a second chance: blocks evicted from the
+device-resident ``PrefixCache`` drop into a host-RAM store (LMCache-style);
+a later match restores them instead of recomputing. The paper leaves this
+as future work — here it is a first-class, bounded, LRU-managed tier.
+
+Economics (why restoring beats recomputing): restoring a block moves
+``kv_bytes_per_token * block_size`` over PCIe/DMA (~10-100 GB/s), while
+recomputing it costs ``2 * N_active * block_size`` FLOPs — for an 8B model
+that is ~1000x more work per token than the transfer, so offload wins
+whenever host RAM is available. ``OffloadPolicy.worth_restoring`` encodes
+the break-even.
+"""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from collections import OrderedDict
+from typing import Any, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.prefix_cache import Chain, PrefixCache
+
+
+def _nbytes(payload: Any) -> int:
+    total = 0
+    for leaf in (payload if isinstance(payload, (tuple, list)) else [payload]):
+        if hasattr(leaf, "nbytes"):
+            total += int(leaf.nbytes)
+        else:
+            total += sys.getsizeof(leaf)
+    return total
+
+
+@dataclasses.dataclass
+class OffloadPolicy:
+    host_bw: float = 25e9            # bytes/s device<->host
+    peak_flops: float = 197e12
+    efficiency: float = 0.5
+
+    def worth_restoring(self, cfg: ModelConfig, n_tokens: int,
+                        payload_bytes: int) -> bool:
+        recompute_s = (2.0 * cfg.active_param_count() * n_tokens
+                       / (self.peak_flops * self.efficiency))
+        restore_s = payload_bytes / self.host_bw
+        return restore_s < recompute_s
+
+
+class HostKVStore:
+    """Bounded LRU store of per-block KV payloads in host memory."""
+
+    def __init__(self, capacity_bytes: int = 1 << 30):
+        self.capacity_bytes = capacity_bytes
+        self._store: "OrderedDict[int, Any]" = OrderedDict()
+        self._bytes: Dict[int, int] = {}
+        self.used_bytes = 0
+        self.offloads = 0
+        self.restores = 0
+        self.host_evictions = 0
+
+    def put(self, block_hash: int, payload: Any):
+        if payload is None:
+            return
+        nb = _nbytes(payload)
+        if nb > self.capacity_bytes:
+            return
+        if block_hash in self._store:
+            self._store.move_to_end(block_hash)
+            return
+        while self.used_bytes + nb > self.capacity_bytes and self._store:
+            h, _ = self._store.popitem(last=False)
+            self.used_bytes -= self._bytes.pop(h)
+            self.host_evictions += 1
+        # device -> host copy (np.asarray forces materialization off-device)
+        host_payload = tuple(np.asarray(p) for p in payload) \
+            if isinstance(payload, (tuple, list)) else np.asarray(payload)
+        self._store[block_hash] = host_payload
+        self._bytes[block_hash] = nb
+        self.used_bytes += nb
+        self.offloads += 1
+
+    def get(self, block_hash: int) -> Optional[Any]:
+        if block_hash not in self._store:
+            return None
+        self._store.move_to_end(block_hash)
+        self.restores += 1
+        return self._store[block_hash]
+
+    def __contains__(self, block_hash: int) -> bool:
+        return block_hash in self._store
+
+    def stats(self) -> Dict[str, float]:
+        return {"used_bytes": self.used_bytes,
+                "capacity_bytes": self.capacity_bytes,
+                "offloads": self.offloads, "restores": self.restores,
+                "host_evictions": self.host_evictions}
+
+
+class TieredPrefixCache(PrefixCache):
+    """PrefixCache whose evictions offload to a HostKVStore and whose misses
+    consult it — drop-in replacement for the engine's cache."""
+
+    def __init__(self, capacity_blocks: int, block_size: int = 16,
+                 host_store: Optional[HostKVStore] = None,
+                 cfg: Optional[ModelConfig] = None,
+                 policy: OffloadPolicy = OffloadPolicy()):
+        super().__init__(capacity_blocks, block_size)
+        self.host = host_store or HostKVStore()
+        self.cfg = cfg
+        self.policy = policy
+
+    def _remove(self, h: int):
+        blk = self.blocks.get(h)
+        if blk is not None and blk.payload is not None:
+            self.host.put(h, blk.payload)          # offload, don't discard
+        super()._remove(h)
+
+    def match_blocks(self, chain: Chain, now: float = 0.0,
+                     touch: bool = False) -> int:
+        """Device hits first; then extend the run with host-restorable
+        blocks (restored into the device cache on the spot when worth it)."""
+        n = super().match_blocks(chain, now, touch)
+        restored = 0
+        for h in chain[n:]:
+            payload = self.host.get(h) if h in self.host else None
+            if payload is None:
+                break
+            if self.cfg is not None and not self.policy.worth_restoring(
+                    self.cfg, self.block_size, _nbytes(payload)):
+                break
+            # reinsert this block at the tail of the resident chain
+            got = self.insert(chain[: n + restored + 1],
+                              (n + restored + 1) * self.block_size,
+                              now=now,
+                              payloads=None)
+            if got < n + restored + 1:
+                break
+            self.blocks[h].payload = payload
+            restored += 1
+        return n + restored
+
+    def stats(self) -> Dict[str, float]:
+        out = super().stats()
+        out["host"] = self.host.stats()
+        return out

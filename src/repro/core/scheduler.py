@@ -1,0 +1,77 @@
+"""Request scheduling — paper §6, Algorithm 1.
+
+Policies:
+  fifo             first-come-first-serve (PagedAttention baseline)
+  srjf             shortest-remaining-job-first with JCT frozen at ARRIVAL
+                   (the "traditional JCT-based scheduling" of §6.2)
+  srjf_calibrated  PrefillOnly: JCT re-computed against the CURRENT prefix
+                   cache before every scheduling decision, minus the
+                   starvation offset λ·T_queue  (Algorithm 1)
+
+PrefillOnly schedules exactly ONE request per step (§6.1: prefill is
+compute-bound; batching adds latency without throughput).
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import List, Optional, Sequence, Tuple
+
+_req_counter = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    n_input: int
+    arrival: float
+    chain: Tuple[int, ...] = ()            # precomputed prefix hash chain
+    tokens: Optional[Sequence[int]] = None  # real engine only
+    req_id: int = dataclasses.field(default_factory=lambda: next(_req_counter))
+    user_id: Optional[str] = None
+    allowed_tokens: Optional[Tuple[int, ...]] = None   # e.g. (yes_id, no_id)
+    # bookkeeping filled by the engine/simulator:
+    n_cached_at_arrival: int = 0
+    start_time: float = -1.0
+    finish_time: float = -1.0
+    n_cached_at_start: int = 0
+
+    @property
+    def latency(self) -> float:
+        return self.finish_time - self.arrival
+
+
+class Scheduler:
+    def __init__(self, policy: str, jct_model, lam: float = 0.0):
+        """``lam`` (λ) is the paper's fairness knob in JCT-seconds per second
+        of queueing (paper default 500 — their jct unit is ms; ours is s, the
+        ratio is what matters)."""
+        assert policy in ("fifo", "srjf", "srjf_calibrated"), policy
+        self.policy = policy
+        self.jct_model = jct_model
+        self.lam = lam
+
+    def pick(self, queue: List[Request], cache, now: float) -> Optional[int]:
+        """Returns the index into ``queue`` of the request to run next.
+
+        srjf_calibrated implements Algorithm 1: for each waiting request
+        recompute n_cached against the *current* cache (continuous JCT
+        calibration), score = jct(n_input, n_cached) − λ·T_queue, run argmin.
+        """
+        if not queue:
+            return None
+        if self.policy == "fifo":
+            return min(range(len(queue)), key=lambda i: (queue[i].arrival,
+                                                         queue[i].req_id))
+        best_i, best_score = None, None
+        for i, r in enumerate(queue):
+            if self.policy == "srjf":
+                jct = self.jct_model.predict(r.n_input, r.n_cached_at_arrival)
+                score = jct
+            else:
+                n_cached = cache.match_len(r.chain) if cache is not None else 0
+                jct = self.jct_model.predict(r.n_input, n_cached)
+                score = jct - self.lam * (now - r.arrival)
+            key = (score, r.arrival, r.req_id)     # deterministic tie-break
+            if best_score is None or key < best_score:
+                best_score, best_i = key, i
+        return best_i

@@ -1,0 +1,86 @@
+"""Pallas TPU kernel: flash-decoding (single query token vs a deep KV cache).
+
+Grid: (B, KV, n_splits) — the KV sequence is split into tiles; each tile
+updates online-softmax partials (m, l, acc) held in VMEM scratch, and the
+last split normalizes and writes the (group, d) output for this kv head.
+``kv_len`` arrives as a per-batch scalar and masks slots beyond the valid
+length (ring-buffer SWA caches pass kv_len >= S so every slot is valid).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _make_kernel(bs: int, ns: int, scale: float, softcap: float):
+    def kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        s_idx = pl.program_id(2)
+
+        @pl.when(s_idx == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        q = q_ref[0, 0].astype(jnp.float32) * scale     # (G, d)
+        k = k_ref[0, :, 0].astype(jnp.float32)          # (bs, d)
+        v = v_ref[0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)  # (G, bs)
+        if softcap:
+            s = softcap * jnp.tanh(s / softcap)
+        slot = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        s = jnp.where(slot < len_ref[0], s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+        @pl.when(s_idx == ns - 1)
+        def _flush():
+            o_ref[0, 0] = (acc_ref[...]
+                           / jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+    return kernel
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_len: jax.Array, *, softcap: float = 0.0,
+                     scale: float | None = None, block_s: int = 512,
+                     interpret: bool = True) -> jax.Array:
+    """q: (B, KV, G, d); caches: (B, S, KV, d); kv_len: (B,) int32
+    -> (B, KV, G, d). Caller guarantees S % block_s == 0."""
+    B, KV, G, d = q.shape
+    _, S, _, _ = k_cache.shape
+    bs = min(block_s, S)
+    assert S % bs == 0, (S, bs)
+    ns = S // bs
+    if scale is None:
+        scale = d ** -0.5
+    kernel = _make_kernel(bs, ns, scale, softcap)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, KV, ns),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, h, s: (b,)),
+            pl.BlockSpec((1, 1, G, d), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda b, h, s: (b, s, h, 0)),
+            pl.BlockSpec((1, bs, 1, d), lambda b, h, s: (b, s, h, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, d), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(kv_len, q, k_cache, v_cache)

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: blocked causal flash attention (GQA / SWA / softcap).
+
+Hybrid prefilling's counterpart guarantee (paper §4): attention is NOT
+chunked — each (q-block, kv-block) tile streams through VMEM with online
+softmax, so the (S, S) logits never exist and kernel efficiency is intact
+(the paper's complaint about chunked prefill is precisely that it degrades
+the attention kernel).
+
+GQA without materializing repeated KV: the kv-head index of each q head is
+resolved in the BlockSpec index_map (h // group), so HBM holds only
+``num_kv_heads`` K/V copies.
+
+Grid: (B, H, nq, nk), kv innermost. Causal + sliding-window block skipping
+happens via ``pl.when`` on whole tiles — off-diagonal masked tiles cost 0
+FLOPs (the structural half-compute win the dry-run hillclimb measures).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _make_kernel(bq, bk, nk, window, softcap, scale, causal):
+    def kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+        i = pl.program_id(2)
+        j = pl.program_id(3)
+
+        @pl.when(j == 0)
+        def _init():
+            m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+            l_ref[...] = jnp.zeros_like(l_ref)
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        run = jnp.asarray(True)
+        if causal:
+            run = run & (j * bk <= i * bq + bq - 1)
+        if window > 0:
+            run = run & (j * bk + bk - 1 >= i * bq - window + 1)
+
+        @pl.when(run)
+        def _compute():
+            q = q_ref[0, 0].astype(jnp.float32) * scale     # (bq, d)
+            k = k_ref[0, 0].astype(jnp.float32)             # (bk, d)
+            v = v_ref[0, 0].astype(jnp.float32)
+            s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                    preferred_element_type=jnp.float32)
+            if softcap:
+                s = softcap * jnp.tanh(s / softcap)
+            qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            mask = jnp.ones((bq, bk), jnp.bool_)
+            if causal:
+                mask &= qpos >= kpos
+            if window > 0:
+                mask &= (qpos - kpos) < window
+            s = jnp.where(mask, s, NEG_INF)
+            m_prev = m_ref[...]                              # (bq, 1)
+            m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+            p = jnp.exp(s - m_new)
+            corr = jnp.exp(m_prev - m_new)                   # (bq, 1)
+            l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1, keepdims=True)
+            acc_ref[...] = (acc_ref[...] * corr
+                            + jax.lax.dot_general(
+                                p.astype(v.dtype), v,
+                                (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32))
+            m_ref[...] = m_new
+
+        @pl.when(j == nk - 1)
+        def _flush():
+            denom = jnp.maximum(l_ref[...], 1e-30)
+            o_ref[0, 0] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+    return kernel
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, scale: float | None = None,
+                    block_q: int = 256, block_k: int = 256,
+                    interpret: bool = True) -> jax.Array:
+    """q: (B, H, Sq, d); k/v: (B, KV, Sk, d) with H % KV == 0 -> (B, H, Sq, d).
+
+    Caller guarantees Sq % block_q == 0 and Sk % block_k == 0 (ops.py pads
+    with fully-masked positions)."""
+    B, H, Sq, d = q.shape
+    _, KV, Sk, _ = k.shape
+    group = H // KV
+    bq, bk = min(block_q, Sq), min(block_k, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+    nq, nk = Sq // bq, Sk // bk
+    if scale is None:
+        scale = d ** -0.5
+    kernel = _make_kernel(bq, bk, nk, window, softcap, scale, causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,105 @@
+"""jit'd wrappers around the Pallas kernels: padding to block/MXU multiples,
+GQA layout, backend selection (interpret=True everywhere except real TPU).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention import decode_attention as _decode_kernel
+from repro.kernels.flash_attention import flash_attention as _flash_kernel
+from repro.kernels.fused_mlp import fused_mlp as _mlp_kernel
+from repro.kernels.rmsnorm import rmsnorm as _rmsnorm_kernel
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_dim(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    pad = (-x.shape[axis]) % multiple
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "block_f"))
+def fused_mlp(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+              w_down: jax.Array, *, block_t: int = 256,
+              block_f: int = 512) -> jax.Array:
+    """x: (..., T, D) -> (..., T, D); pads T to block_t and F to block_f."""
+    lead = x.shape[:-2]
+    T, D = x.shape[-2:]
+    xf = x.reshape(-1, D)
+    bt = min(block_t, max(8, xf.shape[0]))
+    xp = _pad_dim(xf, 0, bt)
+    bf = min(block_f, w_gate.shape[1])
+    wg = _pad_dim(w_gate, 1, bf)
+    wu = _pad_dim(w_up, 1, bf)
+    wd = _pad_dim(w_down, 0, bf)
+    out = _mlp_kernel(xp, wg, wu, wd, block_t=bt, block_f=bf,
+                      interpret=not _on_tpu())
+    return out[: xf.shape[0]].reshape(*lead, T, D)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "causal", "window", "softcap", "block_q", "block_k"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 256,
+                    block_k: int = 256) -> jax.Array:
+    """Layout: q (B, Sq, H, d), k/v (B, Sk, KV, d) — model-layer layout;
+    transposed to the kernel's (B, heads, S, d) internally."""
+    B, Sq, H, d = q.shape
+    Sk = k.shape[1]
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    qt = _pad_dim(qt, 2, bq)
+    kt = _pad_dim(kt, 2, bk)
+    vt = _pad_dim(vt, 2, bk)
+    # padded kv columns must not contribute: rely on causal mask (padded
+    # q rows are discarded; padded k rows have kpos > every real qpos)
+    out = _flash_kernel(qt, kt, vt, causal=causal, window=window,
+                        softcap=softcap, scale=d ** -0.5, block_q=bq,
+                        block_k=bk, interpret=not _on_tpu())
+    return out[:, :, :Sq].transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("softcap", "block_s"))
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     kv_len: jax.Array, *, softcap: float = 0.0,
+                     block_s: int = 512) -> jax.Array:
+    """q: (B, 1, H, d), caches: (B, S, KV, d), kv_len: (B,) -> (B, 1, H, d)."""
+    B, _, H, d = q.shape
+    S = k_cache.shape[1]
+    KV = k_cache.shape[2]
+    G = H // KV
+    qh = q.reshape(B, KV, G, d)
+    bs = min(block_s, S)
+    kc = _pad_dim(k_cache, 1, bs)
+    vc = _pad_dim(v_cache, 1, bs)
+    out = _decode_kernel(qh, kc, vc, kv_len.astype(jnp.int32),
+                         softcap=softcap, block_s=bs,
+                         interpret=not _on_tpu())
+    return out.reshape(B, 1, H, d)
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_t"))
+def rmsnorm(x: jax.Array, weight: jax.Array, *, eps: float = 1e-6,
+            block_t: int = 256) -> jax.Array:
+    """x: (..., D) -> (..., D); pads the token dim to block_t."""
+    lead = x.shape[:-1]
+    D = x.shape[-1]
+    xf = x.reshape(-1, D)
+    bt = min(block_t, max(8, xf.shape[0]))
+    xp = _pad_dim(xf, 0, bt)
+    out = _rmsnorm_kernel(xp, weight, eps=eps, block_t=bt,
+                          interpret=not _on_tpu())
+    return out[: xf.shape[0]].reshape(*lead, D)

@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def fused_mlp_ref(x: jax.Array, w_gate: jax.Array, w_up: jax.Array,
+                  w_down: jax.Array) -> jax.Array:
+    g = jnp.dot(x, w_gate, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, w_up, preferred_element_type=jnp.float32)
+    a = (jax.nn.silu(g) * u).astype(x.dtype)
+    return jnp.dot(a, w_down, preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0,
+                        scale: float | None = None) -> jax.Array:
+    """q: (B, H, Sq, d); k/v: (B, KV, Sk, d) -> (B, H, Sq, d). Naive softmax."""
+    B, H, Sq, d = q.shape
+    _, KV, Sk, _ = k.shape
+    group = H // KV
+    if scale is None:
+        scale = d ** -0.5
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   kk.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
+def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                         kv_len: jax.Array, *, softcap: float = 0.0,
+                         scale: float | None = None) -> jax.Array:
+    """q: (B, KV, G, d); caches: (B, S, KV, d); kv_len: (B,) -> (B, KV, G, d)."""
+    B, KV, G, d = q.shape
+    S = k_cache.shape[1]
+    if scale is None:
+        scale = d ** -0.5
+    s = jnp.einsum("bkgd,bskd->bkgs", q.astype(jnp.float32) * scale,
+                   k_cache.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    valid = jnp.arange(S)[None, None, None, :] < kv_len[:, None, None, None]
+    s = jnp.where(valid, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgs,bskd->bkgd", p,
+                      v_cache.astype(jnp.float32)).astype(q.dtype)
+
+
+def rmsnorm_ref(x: jax.Array, weight: jax.Array,
+                eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + weight.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,41 @@
+"""Pallas TPU kernel: fused RMSNorm (token-blocked).
+
+Small but on the decode critical path: every block applies two of these per
+layer, and an unfused lowering reads the activation three times (square-sum,
+scale, multiply). The fused kernel streams each (block, D) tile through VMEM
+once. Token-wise => composes with hybrid prefilling chunking trivially.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(jnp.square(x), axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * (1.0 + w_ref[...].astype(jnp.float32))
+                  ).astype(o_ref.dtype)
+
+
+def rmsnorm(x: jax.Array, weight: jax.Array, *, eps: float = 1e-6,
+            block_t: int = 256, interpret: bool = True) -> jax.Array:
+    """x: (T, D), weight: (D,) -> (T, D). Caller pads T to block_t."""
+    T, D = x.shape
+    bt = min(block_t, T)
+    assert T % bt == 0, (T, bt)
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(T // bt,),
+        in_specs=[
+            pl.BlockSpec((bt, D), lambda i: (i, 0)),
+            pl.BlockSpec((D,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bt, D), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((T, D), x.dtype),
+        interpret=interpret,
+    )(x, weight)

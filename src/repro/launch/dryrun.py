@@ -1,0 +1,232 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import: jax locks the device count on first init.
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import numpy as np
+
+from repro.configs import (ASSIGNED, SHAPES, cell_is_runnable, get_config,
+                           shape as get_shape)
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import build_step, lower_step, rules_for
+from repro.runtime.hlo_analysis import parse_hlo
+from repro.runtime.hw import TPU_V5E
+
+RESULTS_DIR = Path(os.environ.get("DRYRUN_DIR", "results/dryrun"))
+
+
+def model_flops(cfg: ModelConfig, shp: ShapeConfig) -> float:
+    """MODEL_FLOPS = 6·N·D (train) / 2·N·D (inference), N = active params."""
+    n = cfg.active_param_count()
+    if shp.kind == "train":
+        return 6.0 * n * shp.tokens
+    if shp.kind == "prefill":
+        return 2.0 * n * shp.tokens
+    return 2.0 * n * shp.global_batch          # decode: one token per row
+
+
+def _suggestion(dominant: str, cell: dict) -> str:
+    if dominant == "compute":
+        if cell["useful_ratio"] < 0.5:
+            return ("compute-bound with <50% useful FLOPs: cut masked "
+                    "attention waste (tile-skip / smaller kv blocks) or remat")
+        return "compute-bound near peak: only lower-precision or fewer FLOPs help"
+    if dominant == "memory":
+        return ("HBM-bound: fuse elementwise chains, keep intermediates "
+                "chunk-resident (hybrid chunk down), widen arithmetic intensity")
+    return ("collective-bound: reshard to cut all-gathers (EP vs TP), "
+            "overlap collectives with compute, or compress payloads")
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool,
+             rule_overrides=None, tag: str = "baseline",
+             preset: str = "", fp8: bool = False,
+             grad_compression: str = "none", packed: bool = False,
+             no_remat: bool = False) -> dict:
+    import dataclasses
+    from repro.launch.steps import PRESETS
+    from repro.optim import adamw
+    cfg = get_config(arch)
+    if packed:
+        cfg = dataclasses.replace(cfg, packed_attention=True)
+    if no_remat:
+        cfg = dataclasses.replace(cfg, remat=False)
+    if fp8:
+        # the paper's quantized serving setup (FP8 weights, bf16 compute)
+        cfg = dataclasses.replace(cfg, param_dtype="float8_e4m3fn")
+    shp = get_shape(shape_name)
+    if preset:
+        merged = dict(PRESETS[preset])
+        merged.update(rule_overrides or {})
+        rule_overrides = merged
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    cell = {"arch": arch, "shape": shape_name, "mesh": mesh_name, "tag": tag}
+
+    ok, reason = cell_is_runnable(cfg, shp)
+    if not ok:
+        cell.update({"status": "skip", "reason": reason})
+        return cell
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = int(np.prod(list(mesh.shape.values())))
+    rules = rules_for(cfg, shp, mesh, overrides=rule_overrides)
+    opt_cfg = adamw.AdamWConfig(grad_compression=grad_compression)
+    bundle = build_step(cfg, shp, mesh, rules, opt_cfg)
+    with mesh:
+        lowered = lower_step(bundle, mesh, rules)
+        compiled = lowered.compile()
+        mem = compiled.memory_analysis()
+        print(mem)                           # proves it fits (per spec)
+        cost = compiled.cost_analysis()
+        print({k: cost[k] for k in ("flops", "bytes accessed") if k in cost})
+    hlo = parse_hlo(compiled.as_text(), total_devices=n_dev)
+
+    chip = TPU_V5E
+    per_dev_flops = hlo.flops
+    # Memory term from compiled memory stats, not the HLO text: XLA-CPU
+    # materializes mask/scatter loops that fuse away on TPU, so text-derived
+    # traffic overestimates wildly (kept as a diagnostic in hlo.hbm_bytes).
+    # argument+output = one sweep of weights/inputs/results; 2x temp = each
+    # live intermediate written then read once.
+    per_dev_hbm = (mem.argument_size_in_bytes + mem.output_size_in_bytes
+                   - mem.alias_size_in_bytes + 2.0 * mem.temp_size_in_bytes)
+    per_dev_coll = hlo.collective_bytes
+    compute_s = per_dev_flops / chip.peak_flops_bf16
+    memory_s = per_dev_hbm / chip.hbm_bw
+    collective_s = per_dev_coll / chip.ici_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shp)
+    total_hlo_flops = per_dev_flops * n_dev
+    step_time = max(terms.values())
+    ideal = mf / (n_dev * chip.peak_flops_bf16)
+
+    cell.update({
+        "status": "ok",
+        "devices": n_dev,
+        "compile_seconds": round(time.time() - t0, 1),
+        "memory": {
+            "argument_bytes": mem.argument_size_in_bytes,
+            "output_bytes": mem.output_size_in_bytes,
+            "temp_bytes": mem.temp_size_in_bytes,
+            "alias_bytes": mem.alias_size_in_bytes,
+            "peak_per_device": (mem.argument_size_in_bytes
+                                + mem.temp_size_in_bytes
+                                + mem.output_size_in_bytes
+                                - mem.alias_size_in_bytes),
+            "hbm_per_device": chip.hbm_bytes,
+            "fits": (mem.argument_size_in_bytes + mem.temp_size_in_bytes
+                     + mem.output_size_in_bytes - mem.alias_size_in_bytes)
+                    < chip.hbm_bytes,
+        },
+        "hlo": hlo.asdict(),
+        "xla_cost_analysis": {"flops_once": cost.get("flops", 0.0),
+                              "bytes_once": cost.get("bytes accessed", 0.0)},
+        "roofline": {
+            "compute_s": compute_s,
+            "memory_s": memory_s,
+            "collective_s": collective_s,
+            "dominant": dominant,
+            "model_flops": mf,
+            "hlo_flops_total": total_hlo_flops,
+            "useful_ratio": mf / total_hlo_flops if total_hlo_flops else 0.0,
+            "roofline_fraction": ideal / step_time if step_time else 0.0,
+            "step_time_bound_s": step_time,
+        },
+        "meta": bundle.meta,
+    })
+    cell["roofline"]["suggestion"] = _suggestion(dominant, cell["roofline"])
+    return cell
+
+
+def cell_path(arch, shape_name, mesh_name, tag):
+    return RESULTS_DIR / f"{arch}__{shape_name}__{mesh_name}__{tag}.json"
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (assigned 10)")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--set", action="append", default=[],
+                    help="rule override logical=mesh_axis (hillclimbing); "
+                         "comma-separate for axis tuples")
+    ap.add_argument("--preset", default="",
+                    help="named rule preset from launch.steps.PRESETS")
+    ap.add_argument("--fp8", action="store_true",
+                    help="FP8 serving weights (paper's quantized setup)")
+    ap.add_argument("--grad-compression", default="none",
+                    choices=["none", "bf16", "int8"])
+    ap.add_argument("--packed", action="store_true",
+                    help="exact-causal packed attention schedule")
+    ap.add_argument("--no-remat", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    RESULTS_DIR.mkdir(parents=True, exist_ok=True)
+    archs = sorted(ASSIGNED) if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+    overrides = {}
+    for kv in args.set:
+        k, _, v = kv.partition("=")
+        if v in ("none", "None", ""):
+            overrides[k] = None
+        elif "," in v:
+            overrides[k] = tuple(v.split(","))
+        else:
+            overrides[k] = v
+
+    failures = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for multi in meshes:
+                mesh_name = "pod2x16x16" if multi else "pod16x16"
+                out = cell_path(arch, shape_name, mesh_name, args.tag)
+                if out.exists() and not args.force:
+                    print(f"[cached] {out.name}")
+                    continue
+                print(f"=== {arch} x {shape_name} x {mesh_name} ===",
+                      flush=True)
+                try:
+                    cell = run_cell(arch, shape_name, multi,
+                                    rule_overrides=overrides or None,
+                                    tag=args.tag, preset=args.preset,
+                                    fp8=args.fp8,
+                                    grad_compression=args.grad_compression,
+                                    packed=args.packed,
+                                    no_remat=args.no_remat)
+                except Exception as e:  # a failure here is a bug in the system
+                    traceback.print_exc()
+                    cell = {"arch": arch, "shape": shape_name,
+                            "mesh": mesh_name, "tag": args.tag,
+                            "status": "error", "error": repr(e)}
+                    failures += 1
+                out.write_text(json.dumps(cell, indent=2))
+                status = cell["status"]
+                extra = ""
+                if status == "ok":
+                    r = cell["roofline"]
+                    extra = (f" dominant={r['dominant']}"
+                             f" frac={r['roofline_fraction']:.3f}"
+                             f" fits={cell['memory']['fits']}"
+                             f" ({cell['compile_seconds']}s)")
+                print(f"[{status}] {out.name}{extra}", flush=True)
+    raise SystemExit(1 if failures else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,24 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets XLA_FLAGS before first jax use.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod (data, model); 2 pods => (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes,
+                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Degenerate 1x1 (or 1xN) mesh for CPU smoke/integration tests."""
+    n = jax.device_count()
+    data = max(1, n // model_axis)
+    return jax.make_mesh((data, model_axis), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)

@@ -1,0 +1,377 @@
+"""Step builders: jit-able train / prefill / decode steps with full sharding
+specifications for a given (arch config x workload shape x mesh).
+
+Used by the dry-run (ShapeDtypeStruct lowering), the trainer, and the server.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import hybrid as hybrid_model
+from repro.models import ssm_model
+from repro.models import transformer as tfm
+from repro.models.model import ModelAPI, build, input_specs
+from repro.optim import adamw
+from repro.runtime import sharding as shd
+
+# a representative prefix-KV budget for prefill dry-run cells (tokens kept
+# per request by suffix discard; the serving runtime derives the real value
+# from kv_policy.MemoryModel.prefix_budget_tokens)
+DEFAULT_KV_KEEP = 4096
+
+# gradient-accumulation target: tokens per device per microbatch. Bounds the
+# live activation footprint (remat keeps one block-input per layer per
+# microbatch — measured f32 on the CPU backend, so budget conservatively)
+# and lets the per-microbatch gradient psum overlap the next microbatch's
+# backward.
+MICROBATCH_TOKENS = 4096
+
+
+def _axes_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    n = 1
+    for a in axes:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def _batch_axes(rules: Dict, mesh: Mesh):
+    axes = rules.get("batch") or ()
+    if isinstance(axes, str):
+        axes = (axes,)
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def microbatches_for(shp: ShapeConfig, mesh: Mesh,
+                     target_tokens: int = MICROBATCH_TOKENS,
+                     dp: Optional[int] = None) -> int:
+    if dp is None:
+        dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    local_seqs = max(1, shp.global_batch // dp)
+    want = max(1, (local_seqs * shp.seq_len) // target_tokens)
+    # largest divisor of local_seqs that is <= want
+    mb = 1
+    for d in range(1, local_seqs + 1):
+        if local_seqs % d == 0 and d <= want:
+            mb = d
+    return mb
+
+
+# Named rule presets for perf hillclimbing (dryrun --preset <name>).
+PRESETS = {
+    # PrefillOnly's own thesis at pod scale: no model parallelism — the model
+    # is replicated per chip (instance), batch shards over EVERY mesh axis.
+    "dp_full": {
+        "batch": ("pod", "data", "model"),
+        "shards": ("pod", "data", "model"),
+        "heads": None, "kv_heads": None, "qkv": None, "d_ff": None,
+        "vocab": None, "d_model": None, "ssm_inner": None, "ssm_heads": None,
+        "experts": None, "seq": None,
+    },
+    # Megatron sequence parallelism on top of the default TP layout.
+    "sp": {"seq": "model"},
+    # expert parallelism over the model axis (experts must divide it)
+    "ep": {"experts": "model", "d_ff": None},
+    # context-parallel serving: weights replicated (use with --fp8), tokens
+    # sharded batch x data and seq x model; attention all-gathers only K/V
+    # (GQA makes that small), MLP is fully token-parallel — no activation
+    # psums at all.
+    "cp_serve": {
+        "seq": "model", "attn_seq": "model",
+        "d_ff": None, "qkv": None, "heads": None, "kv_heads": None,
+        "vocab": None, "d_model": None, "shards": ("pod", "data", "model"),
+    },
+}
+
+
+def _family_module(cfg: ModelConfig):
+    if cfg.family == "ssm":
+        return ssm_model
+    if cfg.family == "hybrid":
+        return hybrid_model
+    return tfm
+
+
+def rules_for(cfg: ModelConfig, shp: ShapeConfig, mesh: Mesh,
+              overrides: Optional[Dict] = None) -> Dict:
+    """Per-cell logical->mesh rules. long-context decode (batch too small to
+    shard) turns on KV-sequence context parallelism over the data axis."""
+    rules = shd.make_rules()
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    tp = mesh.shape.get("model", 1)
+    # FSDP: when TP alone leaves > ~25% of HBM in weights (the big MoEs),
+    # additionally shard every weight's d_model dim over the data axes.
+    # Weights enter the layer scan as xs, so XLA all-gathers ONE LAYER at a
+    # time inside the loop — classic FSDP gather-per-layer behaviour.
+    from repro.runtime.hw import TPU_V5E
+    wbytes = (2 if shp.kind == "train"
+              else jnp.dtype(cfg.param_dtype).itemsize)
+    if cfg.param_count() * wbytes / tp > 0.25 * TPU_V5E.hbm_bytes:
+        rules["d_model"] = ("pod", "data")
+        if shp.kind == "train":
+            # Megatron-style sequence parallelism: the residual stream (and
+            # with it the remat-saved activation stacks) shards over the
+            # model axis between blocks; attention/MLP gather per layer
+            # ("attn_seq" stays unsharded).
+            rules["seq"] = "model"
+    if shp.kind == "decode" and shp.global_batch < dp:
+        rules["kv_seq"] = "data"
+        rules["seq"] = None
+    if (shp.kind == "decode" and cfg.has_attention
+            and cfg.num_kv_heads % tp != 0):
+        # GQA with fewer KV heads than the TP degree: shard head_dim instead
+        # so the 32k-deep KV cache still splits across the model axis
+        rules["kv_heads"] = None
+        rules["head_dim"] = "model"
+    if cfg.is_moe and cfg.num_experts % mesh.shape.get("model", 1) == 0:
+        # EP is available when experts divide the model axis — still TP by
+        # default (see DESIGN.md perf log); flip via overrides.
+        pass
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def num_shards_for(shp: ShapeConfig, mesh: Mesh,
+                   rules: Optional[Dict] = None) -> int:
+    """Device-local token grouping for the sort-based MoE dispatch."""
+    dp = _axes_size(mesh, (rules or {}).get("shards", ("pod", "data")))
+    tokens = shp.global_batch * (shp.seq_len if shp.kind != "decode" else 1)
+    return dp if tokens % dp == 0 else 1
+
+
+def _batch_shardings(specs: Dict, mesh: Mesh, rules: Dict) -> Dict:
+    axes_by_rank = {
+        2: ("batch", "seq"),
+        3: ("batch", "seq", "d_model"),
+        1: ("batch",),
+    }
+
+    def shard(leaf):
+        axes = axes_by_rank[len(leaf.shape)]
+        return NamedSharding(mesh, shd.resolve_spec(axes, shape=leaf.shape,
+                                                    mesh=mesh, rules=rules))
+
+    return jax.tree_util.tree_map(shard, specs)
+
+
+def _cache_shardings(cfg: ModelConfig, cache_specs: Dict, mesh: Mesh,
+                     rules: Dict) -> Dict:
+    axes_tree = _family_module(cfg).cache_axes(cfg)
+
+    def shard(leaf, axes):
+        return NamedSharding(mesh, shd.resolve_spec(axes, shape=leaf.shape,
+                                                    mesh=mesh, rules=rules))
+
+    return {k: shard(cache_specs[k], axes_tree[k]) for k in cache_specs}
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """Everything needed to lower one (arch x shape x mesh) cell."""
+    fn: Callable
+    in_specs: Tuple              # ShapeDtypeStructs (positional)
+    in_shardings: Tuple
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...]
+    api: ModelAPI
+    meta: Dict
+
+
+def build_step(cfg: ModelConfig, shp: ShapeConfig, mesh: Mesh,
+               rules: Optional[Dict] = None,
+               opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig()) -> StepBundle:
+    rules = rules or rules_for(cfg, shp, mesh)
+    if rules.get("seq") == "model":
+        # under SP, token-chunked slicing along a sharded seq axis would
+        # reshard every chunk — the TP/SP sharding already bounds those
+        # intermediates, so chunking is redundant here. MoE capacity drops
+        # to 1.0 (the dispatch buffers are the next-largest train tensors).
+        cfg = dataclasses.replace(cfg, hybrid_chunk=0, logits_chunk=0,
+                                  capacity_factor=1.0)
+    api = build(cfg)
+    defs = api.defs()
+    nsh = num_shards_for(shp, mesh, rules)
+    dp_axes_b = _batch_axes(rules, mesh)
+    dp_batch = _axes_size(mesh, dp_axes_b)
+    params_abs = shd.abstract_params(defs, jnp.float32 if shp.kind == "train"
+                                     else cfg.param_dtype)
+    param_sh = shd.param_shardings(defs, mesh, rules)
+    specs = input_specs(cfg, shp, api)
+    repl = NamedSharding(mesh, P())
+
+    if shp.kind == "train":
+        if rules.get("d_model") is not None and \
+                opt_cfg.moment_dtype == "float32":
+            # weight-dominated (FSDP) cells: bf16 Adam moments halve the
+            # optimizer-state footprint (master params stay fp32), and the
+            # microbatch gradient accumulator runs in bf16 (the
+            # grad-compression knob applied at the accumulation step)
+            opt_cfg = dataclasses.replace(opt_cfg, moment_dtype="bfloat16",
+                                          grad_compression="bf16")
+        mdt = jnp.dtype(opt_cfg.moment_dtype)
+        state_abs = {
+            "params": params_abs,
+            "m": shd.abstract_params(defs, mdt),
+            "v": shd.abstract_params(defs, mdt),
+            "step": jax.ShapeDtypeStruct((), jnp.int32),
+        }
+        # ZeRO-1: fp32 master/moments sharded over DP axes as well
+        opt_sh = shd.optimizer_shardings(defs, mesh, rules)
+        state_sh = {"params": opt_sh, "m": opt_sh, "v": opt_sh,
+                    "step": repl}
+        batch_sh = _batch_shardings(specs["batch"], mesh, rules)
+        mb = microbatches_for(shp, mesh, dp=dp_batch)
+
+        def train_step(state, batch):
+            from repro.models.model import cast_params
+
+            # all-gather the DP-sharded master weights ONCE, in bf16
+            params_c = cast_params(state["params"], cfg.dtype)
+            params_c = jax.tree_util.tree_map(
+                lambda a, s: jax.lax.with_sharding_constraint(a, s),
+                params_c, param_sh)
+
+            def loss_fn(p, mbatch):
+                return api.train_loss(p, mbatch, num_shards=nsh)
+
+            acc_dtype = (jnp.bfloat16 if opt_cfg.grad_compression == "bf16"
+                         else jnp.float32)
+            if mb == 1:
+                loss, grads = jax.value_and_grad(loss_fn)(params_c, batch)
+                grads = jax.tree_util.tree_map(
+                    lambda g, s: jax.lax.with_sharding_constraint(
+                        g.astype(acc_dtype), s), grads, opt_sh)
+            else:
+                # gradient accumulation: scan over microbatches; activations
+                # live only within one microbatch's grad computation, and the
+                # per-microbatch grad psum overlaps the next one's backward.
+                # The split is DEVICE-LOCAL: each device contributes
+                # local/mb of its own rows to every microbatch (no resharding).
+                dp_axes = dp_axes_b
+                dp = dp_batch
+                B = shp.global_batch
+                local = B // dp
+
+                def split(x):
+                    tail = x.shape[1:]
+                    x = x.reshape(dp, mb, local // mb, *tail)
+                    x = jnp.moveaxis(x, 1, 0).reshape(mb, B // mb, *tail)
+                    spec = P(None, dp_axes, *([None] * len(tail)))
+                    return jax.lax.with_sharding_constraint(
+                        x, NamedSharding(mesh, spec))
+
+                mbatches = jax.tree_util.tree_map(split, batch)
+                # the accumulator lives DP-sharded (ZeRO): each microbatch's
+                # grads are reduce-scattered into it
+                zero = jax.tree_util.tree_map(
+                    lambda p, s: jax.lax.with_sharding_constraint(
+                        jnp.zeros(p.shape, acc_dtype), s),
+                    state["params"], opt_sh)
+
+                def body(acc, mbatch):
+                    g_acc, l_acc = acc
+                    l, g = jax.value_and_grad(loss_fn)(params_c, mbatch)
+                    g_acc = jax.tree_util.tree_map(
+                        lambda a, gg, s: jax.lax.with_sharding_constraint(
+                            a + gg.astype(acc_dtype), s),
+                        g_acc, g, opt_sh)
+                    return (g_acc, l_acc + l), None
+
+                (grads, loss), _ = jax.lax.scan(
+                    body, (zero, jnp.zeros((), jnp.float32)), mbatches)
+                grads = jax.tree_util.tree_map(lambda g: g / mb, grads)
+                loss = loss / mb
+
+            # (bf16 compression already applied at accumulation when on)
+            new_state = adamw.apply_updates(state, grads, opt_cfg)
+            return new_state, {"loss": loss,
+                               "gnorm": adamw.global_norm(grads)}
+
+        return StepBundle(
+            fn=train_step,
+            in_specs=(state_abs, specs["batch"]),
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, {"loss": repl, "gnorm": repl}),
+            donate_argnums=(0,),
+            api=api,
+            meta={"kind": "train", "num_shards": nsh, "microbatches": mb},
+        )
+
+    if shp.kind == "prefill":
+        kv_keep = min(DEFAULT_KV_KEEP, shp.seq_len)
+        batch_sh = _batch_shardings(specs["batch"], mesh, rules)
+
+        def prefill_step(params, batch):
+            return api.prefill(params, batch, kv_keep=kv_keep,
+                               num_shards=nsh)
+
+        # explicit output shardings: the prefix-KV tree is large (layers x
+        # batch x kv_keep x heads) — left unspecified XLA may replicate it
+        logits_sh = NamedSharding(mesh, shd.resolve_spec(
+            ("batch", "vocab"), shape=(shp.global_batch, cfg.vocab_size),
+            mesh=mesh, rules=rules))
+        with shd.use_sharding(mesh, rules):
+            out_abs = jax.eval_shape(prefill_step, params_abs,
+                                     specs["batch"])
+        kv_abs = out_abs[1]
+        kv_sh = None
+        if kv_abs is not None:
+            axes_tree = _family_module(cfg).cache_axes(cfg)
+            kv_sh = {
+                k: NamedSharding(mesh, shd.resolve_spec(
+                    axes_tree[k], shape=kv_abs[k].shape, mesh=mesh,
+                    rules=rules))
+                for k in kv_abs
+            }
+        return StepBundle(
+            fn=prefill_step,
+            in_specs=(params_abs, specs["batch"]),
+            in_shardings=(param_sh, batch_sh),
+            out_shardings=(logits_sh, kv_sh),
+            donate_argnums=(),
+            api=api,
+            meta={"kind": "prefill", "num_shards": nsh, "kv_keep": kv_keep},
+        )
+
+    # decode: serve_step(params, tokens, cache, position)
+    cache_specs = specs["cache"]
+    cache_sh = _cache_shardings(cfg, cache_specs, mesh, rules)
+    tok_sh = _batch_shardings({"t": specs["tokens"]}, mesh, rules)["t"]
+
+    def serve_step(params, tokens, cache, position):
+        return api.decode_step(params, tokens, cache, position,
+                               num_shards=nsh)
+
+    logits_sh = NamedSharding(mesh, shd.resolve_spec(
+        ("batch", "vocab"), shape=(shp.global_batch, cfg.vocab_size),
+        mesh=mesh, rules=rules))
+    return StepBundle(
+        fn=serve_step,
+        in_specs=(params_abs, specs["tokens"], cache_specs,
+                  specs["position"]),
+        in_shardings=(param_sh, tok_sh, cache_sh, repl),
+        out_shardings=(logits_sh, cache_sh),
+        donate_argnums=(2,),
+        api=api,
+        meta={"kind": "decode", "num_shards": nsh},
+    )
+
+
+def lower_step(bundle: StepBundle, mesh: Mesh, rules: Optional[Dict] = None):
+    """Trace + lower under the sharding context (zero allocation)."""
+    with shd.use_sharding(mesh, rules):
+        jitted = jax.jit(bundle.fn,
+                         in_shardings=bundle.in_shardings,
+                         out_shardings=bundle.out_shardings,
+                         donate_argnums=bundle.donate_argnums)
+        return jitted.lower(*bundle.in_specs)

@@ -1,0 +1,192 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block applied
+every ``attn_every`` layers (shared weights, distinct KV per application).
+
+Structure: ``num_layers`` mamba blocks grouped as (G groups x attn_every);
+after each group the shared attention+MLP block runs. Simplification vs the
+released checkpoints (concat-with-embedding input, per-application LoRA) is
+recorded in DESIGN.md — the systems-relevant property (shared weights, hybrid
+KV/state caching) is preserved.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.hybrid_prefill import chunked_softmax_xent, last_token_logits
+from repro.models import layers as L
+from repro.models.mamba2 import mamba_defs, mamba_prefill, mamba_decode
+from repro.models.transformer import stack_defs, head_weight
+from repro.runtime.sharding import pdef
+
+
+def _n_groups(cfg: ModelConfig) -> int:
+    assert cfg.num_layers % cfg.attn_every == 0, (cfg.num_layers, cfg.attn_every)
+    return cfg.num_layers // cfg.attn_every
+
+
+def model_defs(cfg: ModelConfig) -> Dict:
+    mamba_block = {
+        "ln": pdef((cfg.d_model,), ("d_model",), init="zeros"),
+        "mamba": mamba_defs(cfg),
+    }
+    shared = {
+        "ln1": pdef((cfg.d_model,), ("d_model",), init="zeros"),
+        "ln2": pdef((cfg.d_model,), ("d_model",), init="zeros"),
+        "attn": L.attention_defs(cfg),
+        "mlp": L.mlp_defs(cfg.d_model, cfg.d_ff_shared),
+    }
+    out: Dict[str, Any] = {
+        "embed": L.embed_defs(cfg),
+        # grouped (G, attn_every, ...) for the nested scan
+        "blocks": stack_defs(stack_defs(mamba_block, cfg.attn_every),
+                             _n_groups(cfg)),
+        "shared": shared,
+        "final_norm": pdef((cfg.d_model,), ("d_model",), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = pdef((cfg.d_model, cfg.vocab_size),
+                              ("d_model", "vocab"), init="scaled")
+    return out
+
+
+def _shared_attn_full(params: Dict, x: jax.Array, cfg: ModelConfig,
+                      positions: jax.Array, kv_keep: int):
+    sp = params["shared"]
+    h = L.rms_norm(x, sp["ln1"])
+    attn, k, v = L.attention_prefill(sp["attn"], h, cfg, positions=positions,
+                                     chunk=cfg.hybrid_chunk)
+    x = x + attn
+    h = L.rms_norm(x, sp["ln2"])
+    x = x + L.mlp_apply(sp["mlp"], h, chunk=cfg.hybrid_chunk)
+    kv = (k[:, :kv_keep], v[:, :kv_keep]) if kv_keep > 0 else None
+    return x, kv
+
+
+def forward_full(params: Dict, cfg: ModelConfig, *,
+                 tokens: Optional[jax.Array] = None,
+                 embeds: Optional[jax.Array] = None,
+                 kv_keep: int = 0, collect_state: bool = False,
+                 remat: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+    dtype = jnp.dtype(cfg.dtype)
+    x = (L.embed_apply(params["embed"], tokens, dtype)
+         if embeds is None else embeds.astype(dtype))
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    keep = min(kv_keep, S)
+
+    def mamba_one(x, bp):
+        def fn(x):
+            h = L.rms_norm(x, bp["ln"])
+            out, hf, cf = mamba_prefill(bp["mamba"], h, cfg,
+                                        chunk=cfg.hybrid_chunk)
+            return x + out, (hf, cf)
+        if remat:
+            fn = jax.checkpoint(fn)
+        x, st = fn(x)
+        return x, st if collect_state else None
+
+    def group(x, gp):
+        x, states = jax.lax.scan(mamba_one, x, gp)      # inner: attn_every
+        fn = lambda xx: _shared_attn_full(params, xx, cfg, positions, keep)
+        if remat:
+            fn = jax.checkpoint(fn)                     # shared block too
+        x, kv = fn(x)
+        return x, (states, kv)
+
+    x, (states, kvs) = jax.lax.scan(group, x, params["blocks"])
+    aux: Optional[Dict] = None
+    if collect_state or keep > 0:
+        aux = {}
+        if collect_state:
+            aux["ssm"], aux["conv"] = states[0], states[1]
+        if keep > 0:
+            aux["k"], aux["v"] = kvs[0], kvs[1]          # (G, B, keep, KV, hd)
+    return L.rms_norm(x, params["final_norm"]), aux
+
+
+def train_loss(params: Dict, cfg: ModelConfig, batch: Dict,
+               num_shards: int = 1) -> jax.Array:
+    hidden, _ = forward_full(params, cfg, tokens=batch.get("tokens"),
+                             embeds=batch.get("embeds"), remat=cfg.remat)
+    loss, cnt = chunked_softmax_xent(hidden, head_weight(params, cfg),
+                                     batch["labels"], cfg.logits_chunk)
+    return loss / jnp.maximum(cnt, 1.0)
+
+
+def prefill(params: Dict, cfg: ModelConfig, batch: Dict, *,
+            kv_keep: int = 0, num_shards: int = 1):
+    hidden, aux = forward_full(params, cfg, tokens=batch.get("tokens"),
+                               embeds=batch.get("embeds"), kv_keep=kv_keep,
+                               collect_state=True)
+    logits = last_token_logits(hidden, head_weight(params, cfg))
+    return logits, aux
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               abstract: bool = False) -> Dict:
+    G = _n_groups(cfg)
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    W = cfg.ssm_conv_width
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    shapes = {
+        "ssm": ((G, cfg.attn_every, batch, H, P, N), jnp.float32),
+        "conv": ((G, cfg.attn_every, batch, W - 1, conv_dim),
+                 jnp.dtype(cfg.dtype)),
+        "k": ((G, batch, max_len, KV, hd), jnp.dtype(cfg.dtype)),
+        "v": ((G, batch, max_len, KV, hd), jnp.dtype(cfg.dtype)),
+    }
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+    return {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+
+
+def cache_axes(cfg: ModelConfig) -> Dict:
+    return {
+        "ssm": ("layers", "layers", "batch", "ssm_heads", None, None),
+        "conv": ("layers", "layers", "batch", None, "ssm_inner"),
+        "k": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+        "v": ("layers", "batch", "kv_seq", "kv_heads", "head_dim"),
+    }
+
+
+def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                cache: Dict, position: jax.Array, *, num_shards: int = 1):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_apply(params["embed"], tokens[:, None], dtype)
+    sp = params["shared"]
+
+    def mamba_one(x, xs):
+        bp, h, conv = xs
+        hdd = L.rms_norm(x, bp["ln"])
+        out, h, conv = mamba_decode(bp["mamba"], hdd, cfg, h=h, conv_state=conv)
+        return x + out, (h, conv)
+
+    def group(carry, xs):
+        x, g, k_all, v_all = carry
+        gp, h_g, conv_g = xs
+        x, (h_g, conv_g) = jax.lax.scan(mamba_one, x, (gp, h_g, conv_g))
+        h = L.rms_norm(x, sp["ln1"])
+        # attention KV cache carried + updated in place (see transformer)
+        kc = jax.lax.dynamic_index_in_dim(k_all, g, 0, False)
+        vc = jax.lax.dynamic_index_in_dim(v_all, g, 0, False)
+        attn, kc, vc = L.attention_decode(sp["attn"], h, cfg,
+                                          position=position, k_cache=kc,
+                                          v_cache=vc, ring=False)
+        k_all = jax.lax.dynamic_update_index_in_dim(k_all, kc, g, 0)
+        v_all = jax.lax.dynamic_update_index_in_dim(v_all, vc, g, 0)
+        x = x + attn
+        h = L.rms_norm(x, sp["ln2"])
+        x = x + L.mlp_apply(sp["mlp"], h)
+        return (x, g + 1, k_all, v_all), (h_g, conv_g)
+
+    (x, _, k_all, v_all), ys = jax.lax.scan(
+        group, (x, 0, cache["k"], cache["v"]),
+        (params["blocks"], cache["ssm"], cache["conv"]))
+    new_cache = {"ssm": ys[0], "conv": ys[1], "k": k_all, "v": v_all}
+    hidden = L.rms_norm(x, params["final_norm"])
+    logits = last_token_logits(hidden, head_weight(params, cfg))
+    return logits, new_cache

@@ -1,0 +1,130 @@
+"""Model zoo dispatcher — one uniform API over all families.
+
+API (all pure functions closed over the config):
+    defs()                          ParamDef tree (shapes+logical axes+init)
+    train_loss(params, batch, num_shards)      scalar loss
+    prefill(params, batch, kv_keep, num_shards) -> (last logits, prefix cache)
+    decode_step(params, tokens, cache, position, num_shards) -> (logits, cache)
+    init_cache(batch, max_len, abstract)
+    input_specs(shape_cfg)          ShapeDtypeStruct stand-ins for the dry-run
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import hybrid as hybrid_model
+from repro.models import ssm_model
+from repro.models import transformer as tfm
+
+
+def cast_params(params: Any, dtype) -> Any:
+    """Cast float params to the compute dtype (mixed precision: fp32 master
+    weights live in the optimizer; every step computes in cfg.dtype)."""
+    dtype = jnp.dtype(dtype)
+
+    def cast(a):
+        if hasattr(a, "dtype") and jnp.issubdtype(a.dtype, jnp.floating):
+            return a.astype(dtype)
+        return a
+
+    return jax.tree_util.tree_map(cast, params)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelAPI:
+    cfg: ModelConfig
+    defs: Callable[[], Any]
+    train_loss: Callable[..., jax.Array]
+    prefill: Callable[..., Any]
+    decode_step: Callable[..., Any]
+    init_cache: Callable[..., Any]
+
+
+def build(cfg: ModelConfig) -> ModelAPI:
+    if cfg.family == "ssm":
+        mod = ssm_model
+    elif cfg.family == "hybrid":
+        mod = hybrid_model
+    else:  # dense / moe / vlm / audio share the transformer implementation
+        mod = tfm
+
+    def _cast(params):
+        # 1-byte (fp8) weights: casting the whole tree would materialize a
+        # full bf16 copy in HBM — the per-layer cast inside each scan body
+        # (models/transformer._cast_block) handles those instead.
+        if jnp.dtype(cfg.param_dtype).itemsize == 1:
+            return params
+        return cast_params(params, cfg.dtype)
+
+    return ModelAPI(
+        cfg=cfg,
+        defs=lambda: mod.model_defs(cfg),
+        train_loss=lambda params, batch, num_shards=1:
+            mod.train_loss(_cast(params), cfg, batch, num_shards=num_shards),
+        prefill=lambda params, batch, kv_keep=0, num_shards=1:
+            mod.prefill(_cast(params), cfg, batch, kv_keep=kv_keep,
+                        num_shards=num_shards),
+        decode_step=lambda params, tokens, cache, position, num_shards=1:
+            mod.decode_step(_cast(params), cfg, tokens, cache, position,
+                            num_shards=num_shards),
+        init_cache=lambda batch, max_len, abstract=False:
+            mod.init_cache(cfg, batch, max_len, abstract=abstract),
+    )
+
+
+def input_specs(cfg: ModelConfig, shp: ShapeConfig,
+                api: Optional[ModelAPI] = None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    Weak-type-correct, shardable, zero allocation. Modality frontends are
+    STUBS: the vlm family receives precomputed patch embeddings; the audio
+    family receives precomputed EnCodec codec-token ids.
+    """
+    B, S = shp.global_batch, shp.seq_len
+    i32 = jnp.dtype(jnp.int32)
+    act = jnp.dtype(cfg.dtype)
+
+    if shp.kind == "train":
+        if cfg.embed_inputs:
+            batch = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        else:  # vlm stub: precomputed patch embeddings
+            batch = {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), act)}
+        batch["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        return {"batch": batch}
+
+    if shp.kind == "prefill":
+        if cfg.embed_inputs:
+            return {"batch": {"tokens": jax.ShapeDtypeStruct((B, S), i32)}}
+        return {"batch": {"embeds": jax.ShapeDtypeStruct((B, S, cfg.d_model), act)}}
+
+    # decode: one new token against a seq_len-deep cache
+    api = api or build(cfg)
+    cache = api.init_cache(B, S, abstract=True)
+    return {
+        "tokens": jax.ShapeDtypeStruct((B,), i32),
+        "cache": cache,
+        "position": jax.ShapeDtypeStruct((B,), i32),
+    }
+
+
+def make_batch(cfg: ModelConfig, batch_size: int, seq_len: int,
+               rng: jax.Array, kind: str = "train") -> Dict[str, jax.Array]:
+    """Concrete random batch (smoke tests / examples)."""
+    kt, kl = jax.random.split(rng)
+    if cfg.embed_inputs:
+        batch: Dict[str, jax.Array] = {
+            "tokens": jax.random.randint(kt, (batch_size, seq_len), 0,
+                                         cfg.vocab_size, dtype=jnp.int32)}
+    else:
+        batch = {"embeds": jax.random.normal(
+            kt, (batch_size, seq_len, cfg.d_model), jnp.float32
+        ).astype(jnp.dtype(cfg.dtype)) * 0.02}
+    if kind == "train":
+        batch["labels"] = jax.random.randint(kl, (batch_size, seq_len), 0,
+                                             cfg.vocab_size, dtype=jnp.int32)
+    return batch

@@ -1,0 +1,155 @@
+"""Mixture-of-Experts MLP — sort-based dispatch, shard-local, with an
+explicit-collective (shard_map) distributed path.
+
+TPU-friendly design:
+  * tokens stay LOCAL to a device for the argsort / scatter / gather that
+    implement dispatch (no cross-device sort; the classic GShard one-hot
+    dispatch tensor would be O(T*E*C) and is avoided entirely).
+  * expert FFN weights are (E, D, F) with ``d_ff`` sharded over the model
+    axis (TP). Under shard_map the collective schedule is pinned by hand:
+    weights enter d_model-GATHERED (cheap: one layer's shards), each device
+    computes its token shard against its F-shard, tokens are combined
+    locally, and ONE psum over the model axis reduces the (tokens, D)
+    partials. Letting SPMD choose here partial-summed the (E, C, F) expert
+    intermediates over the data axis instead — measured 2.8 TB/step on
+    mixtral prefill.
+  * capacity C = ceil(T_local*K/E * capacity_factor); overflow tokens drop
+    to the residual path (standard dropping MoE). Routing is per-token, so
+    hybrid prefilling (chunking the token axis) remains exact.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.core.hybrid_prefill import chunked_map
+from repro.models.layers import mlp_defs, mlp_apply
+from repro.runtime.sharding import active_mesh, constrain, pdef
+
+
+def moe_defs(cfg: ModelConfig) -> Dict:
+    D, F, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    defs = {
+        "router": pdef((D, E), ("d_model", "experts"), init="scaled"),
+        "w_gate": pdef((E, D, F), ("experts", "d_model", "d_ff"), init="scaled"),
+        "w_up": pdef((E, D, F), ("experts", "d_model", "d_ff"), init="scaled"),
+        "w_down": pdef((E, F, D), ("experts", "d_ff", "d_model"), init="scaled"),
+    }
+    if cfg.shared_expert:
+        defs["shared"] = mlp_defs(D, F)
+    return defs
+
+
+def _capacity(t_local: int, cfg: ModelConfig) -> int:
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    c = int(math.ceil(t_local * K / E * cfg.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # >=8, rounded up to a multiple of 8
+
+
+def _dispatch_compute(xr: jax.Array, router, w_gate, w_up, w_down,
+                      cfg: ModelConfig) -> jax.Array:
+    """Device-local sort-based MoE on a (t, D) token shard. Returns the
+    (t, D) output, PARTIAL over any sharded d_ff dim of the weights."""
+    E, K = cfg.num_experts, cfg.num_experts_per_tok
+    t, D = xr.shape
+    C = _capacity(t, cfg)
+    logits = (xr @ router).astype(jnp.float32)            # (t, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_w, gate_idx = jax.lax.top_k(probs, K)            # (t, K)
+    gate_w = gate_w / jnp.sum(gate_w, axis=-1, keepdims=True)
+
+    flat_e = gate_idx.reshape(t * K)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    tok = order // K                                      # source token
+    seg_start = jnp.searchsorted(sorted_e, jnp.arange(E))
+    pos = jnp.arange(t * K) - seg_start[sorted_e]
+    keep = pos < C
+    dest = jnp.where(keep, sorted_e * C + pos, E * C)     # E*C = dump row
+
+    buf = jnp.zeros((E * C + 1, D), xr.dtype).at[dest].set(xr[tok])
+    h = buf[: E * C].reshape(E, C, D)
+    g = jnp.einsum("ecd,edf->ecf", h, w_gate)
+    u = jnp.einsum("ecd,edf->ecf", h, w_up)
+    act = jax.nn.silu(g.astype(jnp.float32)).astype(xr.dtype) * u
+    out_e = jnp.einsum("ecf,efd->ecd", act, w_down).reshape(E * C, D)
+
+    gathered = jnp.where(keep[:, None],
+                         out_e[jnp.minimum(dest, E * C - 1)], 0.0)
+    contrib = gathered * gate_w.reshape(t * K)[order][:, None].astype(xr.dtype)
+    return jnp.zeros((t, D), xr.dtype).at[tok].add(contrib)
+
+
+def _mesh_axes(rules_entry, mesh) -> Tuple[str, ...]:
+    if rules_entry is None:
+        return ()
+    if isinstance(rules_entry, str):
+        rules_entry = (rules_entry,)
+    return tuple(a for a in rules_entry if a in mesh.shape)
+
+
+def moe_apply(p: Dict, x: jax.Array, cfg: ModelConfig, *,
+              num_shards: int = 1, hybrid_chunk: int = 0) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D)."""
+    from repro.runtime.sharding import _CTX  # rules of the active context
+    B, S, D = x.shape
+    T = B * S
+    mesh = active_mesh()
+
+    dt = x.dtype
+    castw = lambda a: a.astype(dt) if a.dtype != dt else a
+
+    def local(xr):
+        fn = lambda xc: _dispatch_compute(xc, castw(p["router"]),
+                                          castw(p["w_gate"]),
+                                          castw(p["w_up"]),
+                                          castw(p["w_down"]), cfg)
+        return chunked_map(fn, xr, hybrid_chunk, axis=0)
+
+    if mesh is None:
+        # single-device path (CPU tests / one-chip instances)
+        out = local(x.reshape(T, D)).reshape(B, S, D)
+    else:
+        rules = _CTX.rules or {}
+        tok_axes = _mesh_axes(rules.get("shards"), mesh)
+        tok_size = 1
+        for a in tok_axes:
+            tok_size *= mesh.shape[a]
+        if T % max(tok_size, 1) != 0:
+            tok_axes, tok_size = (), 1      # tiny batches: replicate tokens
+        ff_axes = _mesh_axes(rules.get("d_ff"), mesh)
+        ff_axes = tuple(a for a in ff_axes if a not in tok_axes)
+        w_spec = P(None, None, ff_axes if ff_axes else None)
+        wd_spec = P(None, ff_axes if ff_axes else None, None)
+
+        def local_fn(xr, router, wg, wu, wd):
+            # cast AFTER the shard_map boundary: fp8 weights cross the
+            # all-gather at 1 byte/param, upcast locally per layer
+            cast = lambda a: a.astype(xr.dtype) if a.dtype != xr.dtype else a
+            router, wg, wu, wd = map(cast, (router, wg, wu, wd))
+            out = chunked_map(
+                lambda xc: _dispatch_compute(xc, router, wg, wu, wd, cfg),
+                xr, hybrid_chunk, axis=0)
+            if ff_axes:
+                # ONE reduction of the combined (t, D) partials — never of
+                # the (E, C, F) expert intermediates
+                out = jax.lax.psum(out, ff_axes)
+            return out
+
+        out = jax.shard_map(
+            local_fn, mesh=mesh,
+            in_specs=(P(tok_axes if tok_axes else None, None),
+                      P(None, None), w_spec, w_spec, wd_spec),
+            out_specs=P(tok_axes if tok_axes else None, None),
+            check_vma=False,
+        )(x.reshape(T, D), p["router"], p["w_gate"], p["w_up"], p["w_down"])
+        out = out.reshape(B, S, D)
+
+    if cfg.shared_expert:
+        out = out + mlp_apply(p["shared"], x, chunk=hybrid_chunk)
+    return constrain(out, ("batch", "seq", "d_model"))

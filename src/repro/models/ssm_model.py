@@ -1,0 +1,131 @@
+"""Pure-SSM model (mamba2-130m): scan over stacked Mamba2 blocks.
+
+No attention => no KV cache. The serving "cache" is the per-layer SSM state
+plus the conv tail — O(1) in sequence length, which is why long_500k runs for
+this family (DESIGN.md §Arch-applicability).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.hybrid_prefill import chunked_softmax_xent, last_token_logits
+from repro.models import layers as L
+from repro.models.mamba2 import mamba_defs, mamba_prefill, mamba_decode
+from repro.models.transformer import stack_defs, head_weight
+from repro.runtime.sharding import pdef
+
+
+def model_defs(cfg: ModelConfig) -> Dict:
+    block = {
+        "ln": pdef((cfg.d_model,), ("d_model",), init="zeros"),
+        "mamba": mamba_defs(cfg),
+    }
+    out: Dict[str, Any] = {
+        "embed": L.embed_defs(cfg),
+        "blocks": stack_defs(block, cfg.num_layers),
+        "final_norm": pdef((cfg.d_model,), ("d_model",), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        out["lm_head"] = pdef((cfg.d_model, cfg.vocab_size),
+                              ("d_model", "vocab"), init="scaled")
+    return out
+
+
+def forward_full(params: Dict, cfg: ModelConfig, *,
+                 tokens: Optional[jax.Array] = None,
+                 embeds: Optional[jax.Array] = None,
+                 collect_state: bool = False, remat: bool = False,
+                 init_state: Optional[Dict] = None
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
+    dtype = jnp.dtype(cfg.dtype)
+    x = (L.embed_apply(params["embed"], tokens, dtype)
+         if embeds is None else embeds.astype(dtype))
+
+    def body(x, xs):
+        if init_state is None:
+            bp = xs
+            h0 = conv0 = None
+        else:
+            bp, h0, conv0 = xs
+        def fn(x):
+            h = L.rms_norm(x, bp["ln"])
+            out, hf, cf = mamba_prefill(bp["mamba"], h, cfg,
+                                        chunk=cfg.hybrid_chunk,
+                                        h0=h0, conv0=conv0)
+            return x + out, (hf, cf)
+        if remat:
+            fn = jax.checkpoint(fn)
+        x, (hf, cf) = fn(x)
+        return x, (hf, cf) if collect_state else None
+
+    xs = params["blocks"] if init_state is None else (
+        params["blocks"], init_state["ssm"], init_state["conv"])
+    x, states = jax.lax.scan(body, x, xs)
+    state = None
+    if collect_state:
+        state = {"ssm": states[0], "conv": states[1]}
+    return L.rms_norm(x, params["final_norm"]), state
+
+
+def train_loss(params: Dict, cfg: ModelConfig, batch: Dict,
+               num_shards: int = 1) -> jax.Array:
+    hidden, _ = forward_full(params, cfg, tokens=batch.get("tokens"),
+                             embeds=batch.get("embeds"), remat=cfg.remat)
+    loss, cnt = chunked_softmax_xent(hidden, head_weight(params, cfg),
+                                     batch["labels"], cfg.logits_chunk)
+    return loss / jnp.maximum(cnt, 1.0)
+
+
+def prefill(params: Dict, cfg: ModelConfig, batch: Dict, *,
+            kv_keep: int = 0, num_shards: int = 1,
+            init_state: Optional[Dict] = None):
+    """kv_keep is accepted for API uniformity; the state is O(1) so there is
+    nothing to discard (the PrefillOnly suffix-discard is vacuous here)."""
+    hidden, state = forward_full(params, cfg, tokens=batch.get("tokens"),
+                                 embeds=batch.get("embeds"),
+                                 collect_state=True, init_state=init_state)
+    logits = last_token_logits(hidden, head_weight(params, cfg))
+    return logits, state
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               abstract: bool = False) -> Dict:
+    H, P, N = cfg.ssm_heads, cfg.ssm_headdim, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * cfg.ssm_state
+    W = cfg.ssm_conv_width
+    shapes = {
+        "ssm": ((cfg.num_layers, batch, H, P, N), jnp.float32),
+        "conv": ((cfg.num_layers, batch, W - 1, conv_dim), jnp.dtype(cfg.dtype)),
+    }
+    if abstract:
+        return {k: jax.ShapeDtypeStruct(s, d) for k, (s, d) in shapes.items()}
+    return {k: jnp.zeros(s, d) for k, (s, d) in shapes.items()}
+
+
+def cache_axes(cfg: ModelConfig) -> Dict:
+    return {
+        "ssm": ("layers", "batch", "ssm_heads", None, None),
+        "conv": ("layers", "batch", None, "ssm_inner"),
+    }
+
+
+def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                cache: Dict, position: jax.Array, *, num_shards: int = 1):
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_apply(params["embed"], tokens[:, None], dtype)
+
+    def body(x, xs):
+        bp, h, conv = xs
+        hdd = L.rms_norm(x, bp["ln"])
+        out, h, conv = mamba_decode(bp["mamba"], hdd, cfg, h=h, conv_state=conv)
+        return x + out, (h, conv)
+
+    x, (hs, convs) = jax.lax.scan(body, x,
+                                  (params["blocks"], cache["ssm"], cache["conv"]))
+    hidden = L.rms_norm(x, params["final_norm"])
+    logits = last_token_logits(hidden, head_weight(params, cfg))
+    return logits, {"ssm": hs, "conv": convs}

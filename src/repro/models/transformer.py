@@ -1,0 +1,393 @@
+"""Decoder-only transformer covering the dense / moe / vlm / audio families,
+including gemma2's alternating local(SWA)/global attention + logit softcaps.
+
+All models scan over layer-stacked parameters so HLO size (and therefore
+compile time on this 1-core container) is independent of depth.
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.hybrid_prefill import chunked_softmax_xent, last_token_logits
+from repro.models import layers as L
+from repro.models.moe import moe_defs, moe_apply
+from repro.runtime.sharding import pdef, ParamDef, is_paramdef_leaf
+
+
+# --------------------------------------------------------------------------
+# parameter definitions
+# --------------------------------------------------------------------------
+
+def stack_defs(defs: Any, n: int) -> Any:
+    return jax.tree_util.tree_map(
+        lambda d: ParamDef((n,) + d.shape, ("layers",) + d.axes, d.init, d.scale),
+        defs, is_leaf=is_paramdef_leaf)
+
+
+def block_defs(cfg: ModelConfig) -> Dict:
+    D = cfg.d_model
+    out = {
+        "ln1": pdef((D,), ("d_model",), init="zeros"),
+        "ln2": pdef((D,), ("d_model",), init="zeros"),
+        "attn": L.attention_defs(cfg),
+    }
+    if cfg.is_moe:
+        out["moe"] = moe_defs(cfg)
+    else:
+        out["mlp"] = L.mlp_defs(D, cfg.d_ff)
+    return out
+
+
+def model_defs(cfg: ModelConfig) -> Dict:
+    out: Dict[str, Any] = {"embed": L.embed_defs(cfg)}
+    if cfg.local_global:
+        half = cfg.num_layers // 2
+        out["blocks_local"] = stack_defs(block_defs(cfg), half)
+        out["blocks_global"] = stack_defs(block_defs(cfg), half)
+    else:
+        out["blocks"] = stack_defs(block_defs(cfg), cfg.num_layers)
+    out["final_norm"] = pdef((cfg.d_model,), ("d_model",), init="zeros")
+    if not cfg.tie_embeddings:
+        out["lm_head"] = pdef((cfg.d_model, cfg.vocab_size),
+                              ("d_model", "vocab"), init="scaled")
+    return out
+
+
+def _remat_groups(n_layers: int) -> int:
+    """Largest divisor of n_layers that is <= ~sqrt(n_layers)*1.5."""
+    best = 1
+    limit = int(math.sqrt(n_layers) * 1.5)
+    for g in range(2, n_layers):
+        if n_layers % g == 0 and g <= limit:
+            best = g
+    return best
+
+
+def head_weight(params: Dict, cfg: ModelConfig) -> jax.Array:
+    w = (params["embed"]["tok"].T if cfg.tie_embeddings
+         else params["lm_head"])
+    dt = jnp.dtype(cfg.dtype)
+    return w.astype(dt) if w.dtype != dt else w
+
+
+# --------------------------------------------------------------------------
+# full-sequence forward (train / prefill)
+# --------------------------------------------------------------------------
+
+def _cast_block(bp: Dict, dtype) -> Dict:
+    """Per-layer weight cast (fp8 storage -> compute dtype); no-op at bf16."""
+    dt = jnp.dtype(dtype)
+    return jax.tree_util.tree_map(
+        lambda a: a.astype(dt) if a.dtype != dt else a, bp)
+
+
+def _block_full(bp: Dict, x: jax.Array, cfg: ModelConfig, *,
+                positions: jax.Array, window: int, chunk: int,
+                num_shards: int) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+    bp = _cast_block(bp, cfg.dtype)
+    h = L.rms_norm(x, bp["ln1"])
+    attn, k, v = L.attention_prefill(bp["attn"], h, cfg, positions=positions,
+                                     window=window, chunk=chunk)
+    x = x + attn
+    h = L.rms_norm(x, bp["ln2"])
+    if cfg.is_moe:
+        m = moe_apply(bp["moe"], h, cfg, num_shards=num_shards,
+                      hybrid_chunk=chunk)
+    else:
+        m = L.mlp_apply(bp["mlp"], h, chunk=chunk)
+    return x + m, (k, v)
+
+
+def forward_full(params: Dict, cfg: ModelConfig, *,
+                 tokens: Optional[jax.Array] = None,
+                 embeds: Optional[jax.Array] = None,
+                 kv_keep: int = 0, num_shards: int = 1,
+                 remat: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+    """Returns (final-normed hidden (B,S,D), kv tree or None).
+
+    ``kv_keep`` is the PrefillOnly prefix budget: only the first ``kv_keep``
+    tokens' KV leave each layer (suffix KV discard — the rest is freed by XLA
+    as soon as the layer's attention is done, because it is not a scan output).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    if embeds is None:
+        x = L.embed_apply(params["embed"], tokens, dtype)
+        if cfg.local_global:           # gemma-style embedding scale
+            x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    else:
+        x = embeds.astype(dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    chunk = cfg.hybrid_chunk
+    keep = min(kv_keep, S)
+
+    def run_block(x, bp, window):
+        x, (k, v) = _block_full(bp, x, cfg, positions=positions,
+                                window=window, chunk=chunk,
+                                num_shards=num_shards)
+        # keep the prefix KV in compute dtype — rope's f32 internals must
+        # not leak into the (layers, B, keep, KV, hd) scan output stack
+        kv = ((k[:, :keep].astype(dtype), v[:, :keep].astype(dtype))
+              if keep > 0 else None)
+        return x, kv
+
+    if cfg.local_global:
+        def pair(x, lps):
+            lp_local, lp_global = lps
+            fn1 = lambda x: run_block(x, lp_local, cfg.sliding_window)
+            fn2 = lambda x: run_block(x, lp_global, 0)
+            if remat:
+                fn1, fn2 = jax.checkpoint(fn1), jax.checkpoint(fn2)
+            x, kv_l = fn1(x)
+            x, kv_g = fn2(x)
+            return x, (kv_l, kv_g)
+
+        x, kvs = jax.lax.scan(pair, x,
+                              (params["blocks_local"], params["blocks_global"]))
+        kv = None if keep == 0 else {
+            "local_k": kvs[0][0], "local_v": kvs[0][1],
+            "global_k": kvs[1][0], "global_v": kvs[1][1]}
+    else:
+        def body(x, bp):
+            fn = lambda x: run_block(x, bp, cfg.sliding_window)
+            if remat:
+                fn = jax.checkpoint(fn)
+            return fn(x)
+
+        if jnp.dtype(cfg.param_dtype).itemsize == 1 and not remat:
+            # fp8 serving: index layers from the closure so the per-layer
+            # upcast's operand is loop-VARIANT — scanning over the stacked
+            # weights as xs lets XLA hoist the cast and materialize a full
+            # bf16 copy of the model (measured +16 GB on granite prefill)
+            def body_idx(x, l):
+                bp = jax.tree_util.tree_map(
+                    lambda a: jax.lax.dynamic_index_in_dim(a, l, 0, False),
+                    params["blocks"])
+                return run_block(x, bp, cfg.sliding_window)
+
+            x, kvs = jax.lax.scan(body_idx, x,
+                                  jnp.arange(cfg.num_layers))
+            kv = None if keep == 0 else {"k": kvs[0], "v": kvs[1]}
+            return L.rms_norm(x, params["final_norm"]), kv
+
+        G = _remat_groups(cfg.num_layers) if (remat and keep == 0) else 1
+        if G > 1:
+            # 2-level remat: only G ~ sqrt(L) group inputs are saved across
+            # the forward; each group recomputes its K layers (which are
+            # themselves block-checkpointed) during backward. Cuts the
+            # dominant (L, B, S, D) saved-activation stack by K.
+            K = cfg.num_layers // G
+            grouped = jax.tree_util.tree_map(
+                lambda a: a.reshape(G, K, *a.shape[1:]), params["blocks"])
+
+            @jax.checkpoint
+            def group_fn(x, gp):
+                x, _ = jax.lax.scan(body, x, gp)
+                return x, None
+
+            x, _ = jax.lax.scan(group_fn, x, grouped)
+            kv = None
+        else:
+            x, kvs = jax.lax.scan(body, x, params["blocks"])
+            kv = None if keep == 0 else {"k": kvs[0], "v": kvs[1]}
+
+    return L.rms_norm(x, params["final_norm"]), kv
+
+
+def train_loss(params: Dict, cfg: ModelConfig, batch: Dict,
+               num_shards: int = 1) -> jax.Array:
+    hidden, _ = forward_full(params, cfg, tokens=batch.get("tokens"),
+                             embeds=batch.get("embeds"), kv_keep=0,
+                             num_shards=num_shards, remat=cfg.remat)
+    loss, cnt = chunked_softmax_xent(hidden, head_weight(params, cfg),
+                                     batch["labels"], cfg.logits_chunk,
+                                     final_softcap=cfg.final_softcap)
+    return loss / jnp.maximum(cnt, 1.0)
+
+
+def prefill(params: Dict, cfg: ModelConfig, batch: Dict, *,
+            kv_keep: int = 0, num_shards: int = 1,
+            last_index: Optional[jax.Array] = None
+            ) -> Tuple[jax.Array, Optional[Dict]]:
+    """PrefillOnly serving prefill: (last-token logits (B, V), prefix KV)."""
+    hidden, kv = forward_full(params, cfg, tokens=batch.get("tokens"),
+                              embeds=batch.get("embeds"), kv_keep=kv_keep,
+                              num_shards=num_shards)
+    logits = last_token_logits(hidden, head_weight(params, cfg),
+                               last_index=last_index,
+                               final_softcap=cfg.final_softcap)
+    return logits, kv
+
+
+def prefill_with_prefix(params: Dict, cfg: ModelConfig, batch: Dict,
+                        prefix_kv: Dict, prefix_len: int, *,
+                        kv_keep: int = 0, num_shards: int = 1,
+                        last_index: Optional[jax.Array] = None):
+    """Prefill of a SUFFIX given a cached prefix's KV (prefix-cache hit path).
+
+    tokens/embeds cover positions [prefix_len, prefix_len+S); every layer
+    attends over concat(prefix KV, fresh suffix KV). Returns last-token
+    logits + the suffix KV to extend the cache with (up to ``kv_keep`` total
+    tokens — suffix discard). Dense/vlm/audio/moe families, full attention
+    (window archs take the full-attention path here; engine demos are dense).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    if batch.get("embeds") is None:
+        x = L.embed_apply(params["embed"], batch["tokens"], dtype)
+    else:
+        x = batch["embeds"].astype(dtype)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(prefix_len + jnp.arange(S, dtype=jnp.int32),
+                                 (B, S))
+    chunk = cfg.hybrid_chunk
+    keep_new = max(0, min(kv_keep, prefix_len + S) - prefix_len)
+
+    def body(x, xs):
+        bp, pk, pv = xs
+        h = L.rms_norm(x, bp["ln1"])
+        q, k, v = L._qkv_project(bp["attn"], h, cfg, positions, chunk)
+        k_full = jnp.concatenate([pk.astype(k.dtype), k], axis=1)
+        v_full = jnp.concatenate([pv.astype(v.dtype), v], axis=1)
+        out = L.blocked_attention(q, k_full, v_full, window=cfg.sliding_window,
+                                  softcap=cfg.attn_softcap, q_offset=prefix_len)
+        out = out.reshape(B, S, cfg.num_heads * cfg.head_dim)
+        out = out @ bp["attn"]["wo"]
+        x = x + out
+        h = L.rms_norm(x, bp["ln2"])
+        if cfg.is_moe:
+            m = moe_apply(bp["moe"], h, cfg, num_shards=num_shards,
+                          hybrid_chunk=chunk)
+        else:
+            m = L.mlp_apply(bp["mlp"], h, chunk=chunk)
+        return x + m, (k[:, :keep_new], v[:, :keep_new])
+
+    x, kvs = jax.lax.scan(body, x, (params["blocks"], prefix_kv["k"],
+                                    prefix_kv["v"]))
+    hidden = L.rms_norm(x, params["final_norm"])
+    logits = last_token_logits(hidden, head_weight(params, cfg),
+                               last_index=last_index,
+                               final_softcap=cfg.final_softcap)
+    return logits, {"k": kvs[0], "v": kvs[1]}
+
+
+# --------------------------------------------------------------------------
+# decode (one token against a KV cache)
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               abstract: bool = False) -> Dict:
+    """KV cache tree. SWA-only archs get a ring buffer bounded by the window
+    (this is what makes mixtral's long_500k cell runnable); gemma2 gets a
+    ring for local layers + full cache for global layers."""
+    KV, hd = cfg.num_kv_heads, cfg.head_dim
+    dtype = jnp.dtype(cfg.dtype)
+
+    def mk(shape):
+        if abstract:
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    if cfg.local_global:
+        half = cfg.num_layers // 2
+        w = min(cfg.sliding_window, max_len)
+        return {"local_k": mk((half, batch, w, KV, hd)),
+                "local_v": mk((half, batch, w, KV, hd)),
+                "global_k": mk((half, batch, max_len, KV, hd)),
+                "global_v": mk((half, batch, max_len, KV, hd))}
+    s = max_len
+    if cfg.sliding_window:
+        s = min(cfg.sliding_window, max_len)
+    return {"k": mk((cfg.num_layers, batch, s, KV, hd)),
+            "v": mk((cfg.num_layers, batch, s, KV, hd))}
+
+
+def cache_axes(cfg: ModelConfig) -> Dict:
+    """Logical sharding axes matching ``init_cache``'s tree structure."""
+    kv = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+    if cfg.local_global:
+        return {"local_k": kv, "local_v": kv, "global_k": kv, "global_v": kv}
+    return {"k": kv, "v": kv}
+
+
+def _block_decode(bp: Dict, x: jax.Array, cfg: ModelConfig, *,
+                  position: jax.Array, kc: jax.Array, vc: jax.Array,
+                  ring: bool, num_shards: int):
+    bp = _cast_block(bp, cfg.dtype)
+    h = L.rms_norm(x, bp["ln1"])
+    attn, kc, vc = L.attention_decode(bp["attn"], h, cfg, position=position,
+                                      k_cache=kc, v_cache=vc, ring=ring)
+    x = x + attn
+    h = L.rms_norm(x, bp["ln2"])
+    if cfg.is_moe:
+        m = moe_apply(bp["moe"], h, cfg, num_shards=num_shards)
+    else:
+        m = L.mlp_apply(bp["mlp"], h)
+    return x + m, kc, vc
+
+
+def decode_step(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                cache: Dict, position: jax.Array, *, num_shards: int = 1
+                ) -> Tuple[jax.Array, Dict]:
+    """tokens: (B,) int32; position: (B,) int32 (uniform). -> (logits, cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_apply(params["embed"], tokens[:, None], dtype)
+    if cfg.local_global:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), dtype)
+    ring = bool(cfg.sliding_window)
+
+    # The cache rides in the scan CARRY with per-layer dynamic updates, NOT
+    # as xs/ys — scan ys are double-buffered by XLA, which would cost a full
+    # extra cache copy per step (measured: 2.6x cache in temp).
+    def upd(buf, sl, l):
+        return jax.lax.dynamic_update_index_in_dim(buf, sl, l, 0)
+
+    if cfg.local_global:
+        def pair(carry, xs):
+            x, l, lk_a, lv_a, gk_a, gv_a = carry
+            lp_l, lp_g = xs
+            x, lk, lv = _block_decode(
+                lp_l, x, cfg, position=position,
+                kc=jax.lax.dynamic_index_in_dim(lk_a, l, 0, False),
+                vc=jax.lax.dynamic_index_in_dim(lv_a, l, 0, False),
+                ring=True, num_shards=num_shards)
+            x, gk, gv = _block_decode(
+                lp_g, x, cfg, position=position,
+                kc=jax.lax.dynamic_index_in_dim(gk_a, l, 0, False),
+                vc=jax.lax.dynamic_index_in_dim(gv_a, l, 0, False),
+                ring=False, num_shards=num_shards)
+            return (x, l + 1, upd(lk_a, lk, l), upd(lv_a, lv, l),
+                    upd(gk_a, gk, l), upd(gv_a, gv, l)), None
+
+        init = (x, 0, cache["local_k"], cache["local_v"],
+                cache["global_k"], cache["global_v"])
+        (x, _, lk_a, lv_a, gk_a, gv_a), _ = jax.lax.scan(
+            pair, init, (params["blocks_local"], params["blocks_global"]))
+        new_cache = {"local_k": lk_a, "local_v": lv_a,
+                     "global_k": gk_a, "global_v": gv_a}
+    else:
+        def body(carry, bp):
+            x, l, k_a, v_a = carry
+            x, kc, vc = _block_decode(
+                bp, x, cfg, position=position,
+                kc=jax.lax.dynamic_index_in_dim(k_a, l, 0, False),
+                vc=jax.lax.dynamic_index_in_dim(v_a, l, 0, False),
+                ring=ring, num_shards=num_shards)
+            return (x, l + 1, upd(k_a, kc, l), upd(v_a, vc, l)), None
+
+        # weights stay scan-xs: slices are loop-variant so the per-layer fp8
+        # upcast in _block_decode cannot be hoisted; closure-capture instead
+        # makes them loop INVARIANTS, which XLA COPIES into the loop state
+        # (measured +15.7 GB on mixtral decode)
+        (x, _, k_a, v_a), _ = jax.lax.scan(
+            body, (x, 0, cache["k"], cache["v"]), params["blocks"])
+        new_cache = {"k": k_a, "v": v_a}
+
+    hidden = L.rms_norm(x, params["final_norm"])
+    logits = last_token_logits(hidden, head_weight(params, cfg),
+                               final_softcap=cfg.final_softcap)
+    return logits, new_cache

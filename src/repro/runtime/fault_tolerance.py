@@ -1,0 +1,163 @@
+"""Fault-tolerance machinery for 1000+-node deployments.
+
+Training side:
+  * StepWatchdog — straggler/hang detection: per-step deadline derived from a
+    running p95; on trip, the driver checkpoints and re-shards (drain-and-
+    rejoin, synchronous-SPMD's answer to stragglers)
+  * NaNGuard    — skip-and-reload policy on non-finite loss
+  * Preemption  — SIGTERM -> checkpoint-then-exit hook
+
+Serving side:
+  * InstancePool — health-checked engine instances, rendezvous (HRW) user
+    routing that minimally remaps users on scale-up/down (elastic), and
+    automatic re-dispatch of requests from dead instances.
+"""
+from __future__ import annotations
+
+import hashlib
+import signal
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional
+
+import numpy as np
+
+
+class StepWatchdog:
+    """Flags steps slower than ``factor`` x running p95 (straggler signal)."""
+
+    def __init__(self, window: int = 50, factor: float = 3.0,
+                 min_history: int = 10):
+        self.times = deque(maxlen=window)
+        self.factor = factor
+        self.min_history = min_history
+        self.trips = 0
+
+    def observe(self, seconds: float) -> bool:
+        tripped = False
+        if len(self.times) >= self.min_history:
+            deadline = float(np.percentile(self.times, 95)) * self.factor
+            if seconds > deadline:
+                self.trips += 1
+                tripped = True
+        self.times.append(seconds)
+        return tripped
+
+    def deadline(self) -> Optional[float]:
+        if len(self.times) < self.min_history:
+            return None
+        return float(np.percentile(self.times, 95)) * self.factor
+
+
+class NaNGuard:
+    """Counts consecutive non-finite losses; advises reload after ``limit``."""
+
+    def __init__(self, limit: int = 3):
+        self.limit = limit
+        self.consecutive = 0
+        self.total_skipped = 0
+
+    def observe(self, loss: float) -> str:
+        """Returns 'ok' | 'skip' | 'reload'."""
+        if np.isfinite(loss):
+            self.consecutive = 0
+            return "ok"
+        self.consecutive += 1
+        self.total_skipped += 1
+        return "reload" if self.consecutive >= self.limit else "skip"
+
+
+class PreemptionHandler:
+    """SIGTERM/SIGINT -> set a flag the train loop checks each step."""
+
+    def __init__(self):
+        self.requested = False
+        self._prev = {}
+
+    def install(self):
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            try:
+                self._prev[sig] = signal.signal(sig, self._handle)
+            except ValueError:
+                pass  # not main thread (tests)
+        return self
+
+    def _handle(self, signum, frame):
+        self.requested = True
+
+    def uninstall(self):
+        for sig, prev in self._prev.items():
+            signal.signal(sig, prev)
+
+
+def rendezvous_hash(user_id: str, instances: List[str]) -> str:
+    """Highest-random-weight routing: adding/removing an instance remaps only
+    ~1/n of users (the elastic property user-id routing needs)."""
+    best, best_w = instances[0], -1.0
+    for inst in instances:
+        h = hashlib.blake2b(f"{user_id}|{inst}".encode(),
+                            digest_size=8).digest()
+        w = int.from_bytes(h, "big")
+        if w > best_w:
+            best, best_w = inst, w
+    return best
+
+
+class InstancePool:
+    """Elastic pool of serving engines with health checks + re-dispatch."""
+
+    def __init__(self, make_engine: Callable[[str], object]):
+        self.make_engine = make_engine
+        self.engines: Dict[str, object] = {}
+        self.healthy: Dict[str, bool] = {}
+        self.redispatched = 0
+
+    def scale_to(self, names: List[str]):
+        for n in names:
+            if n not in self.engines:
+                self.engines[n] = self.make_engine(n)
+                self.healthy[n] = True
+        for n in list(self.engines):
+            if n not in names:
+                self._drain(n)
+                del self.engines[n]
+                del self.healthy[n]
+
+    def mark_failed(self, name: str):
+        """Node failure: re-dispatch its queued requests to healthy peers."""
+        if name in self.engines:
+            self.healthy[name] = False
+            self._drain(name)
+
+    def _drain(self, name: str):
+        eng = self.engines[name]
+        pending = list(getattr(eng, "queue", []))
+        eng.queue and eng.queue.clear()
+        for r in pending:
+            target = self.route(r.user_id or str(r.req_id))
+            if target is not None:
+                self.engines[target].queue.append(r)
+                self.redispatched += 1
+
+    def live_names(self) -> List[str]:
+        return [n for n, ok in self.healthy.items() if ok]
+
+    def route(self, user_id: str) -> Optional[str]:
+        live = self.live_names()
+        if not live:
+            return None
+        return rendezvous_hash(user_id, live)
+
+    def submit(self, user_id: str, *args, **kw):
+        name = self.route(user_id)
+        if name is None:
+            raise RuntimeError("no healthy instances")
+        return name, self.engines[name].submit(*args, user_id=user_id, **kw)
+
+    def step_all(self) -> int:
+        done = 0
+        for n in self.live_names():
+            if getattr(self.engines[n], "queue", None):
+                self.engines[n].step()
+                done += 1
+        return done

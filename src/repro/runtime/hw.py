@@ -1,0 +1,49 @@
+"""Hardware constants for the TARGET platform (TPU v5e) + roofline helpers.
+
+This container is CPU-only; these constants drive the analytic roofline
+terms, the MIL memory model, and the simulator's JCT cost model.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    name: str
+    peak_flops_bf16: float      # FLOP/s
+    hbm_bw: float               # bytes/s
+    hbm_bytes: float            # bytes
+    ici_bw: float               # bytes/s per link
+    vmem_bytes: float = 128 * 2**20
+
+
+TPU_V5E = ChipSpec(
+    name="tpu-v5e",
+    peak_flops_bf16=197e12,
+    hbm_bw=819e9,
+    hbm_bytes=16 * 2**30,
+    ici_bw=50e9,
+)
+
+# Reduced-bandwidth variant for the paper's NVLink-vs-PCIe contrast (Fig 8):
+# the analogue of "no NVLink" is a DCN-attached slice (~1/8 the ICI bw).
+TPU_V5E_SLOW_LINKS = dataclasses.replace(TPU_V5E, name="tpu-v5e-dcn",
+                                         ici_bw=6.25e9)
+
+DEFAULT_CHIP = TPU_V5E
+
+
+def compute_seconds(flops: float, chips: int = 1,
+                    chip: ChipSpec = DEFAULT_CHIP, efficiency: float = 1.0) -> float:
+    return flops / (chips * chip.peak_flops_bf16 * efficiency)
+
+
+def memory_seconds(bytes_moved: float, chips: int = 1,
+                   chip: ChipSpec = DEFAULT_CHIP) -> float:
+    return bytes_moved / (chips * chip.hbm_bw)
+
+
+def collective_seconds(bytes_moved: float, chips: int = 1,
+                       chip: ChipSpec = DEFAULT_CHIP) -> float:
+    return bytes_moved / (chips * chip.ici_bw)

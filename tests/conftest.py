@@ -1,0 +1,11 @@
+import os
+
+# Smoke tests must see the single real CPU device (the dry-run sets its own
+# 512-device flag in a separate process).
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+from hypothesis import settings
+
+settings.register_profile("ci", deadline=None, max_examples=25,
+                          derandomize=True)
+settings.load_profile("ci")

@@ -1,0 +1,136 @@
+"""Per-kernel allclose vs the pure-jnp oracle, swept over shapes/dtypes.
+
+All kernels execute in interpret mode on CPU (the TPU target is exercised by
+``.lower()`` structure, not by execution here).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,D,F,bt,bf", [
+    (64, 32, 96, 32, 32),
+    (100, 64, 150, 32, 64),      # ragged T and F (padding path)
+    (16, 16, 16, 16, 16),        # single block
+])
+def test_fused_mlp_matches_ref(T, D, F, bt, bf, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 4)
+    x = jax.random.normal(ks[0], (T, D), jnp.float32).astype(dtype)
+    wg = (jax.random.normal(ks[1], (D, F), jnp.float32) * 0.1).astype(dtype)
+    wu = (jax.random.normal(ks[2], (D, F), jnp.float32) * 0.1).astype(dtype)
+    wd = (jax.random.normal(ks[3], (F, D), jnp.float32) * 0.1).astype(dtype)
+    got = ops.fused_mlp(x, wg, wu, wd, block_t=bt, block_f=bf)
+    want = ref.fused_mlp_ref(x, wg, wu, wd)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_fused_mlp_batched_layout():
+    ks = jax.random.split(jax.random.PRNGKey(1), 4)
+    x = jax.random.normal(ks[0], (2, 40, 32), jnp.float32)
+    wg = jax.random.normal(ks[1], (32, 64), jnp.float32) * 0.1
+    wu = jax.random.normal(ks[2], (32, 64), jnp.float32) * 0.1
+    wd = jax.random.normal(ks[3], (64, 32), jnp.float32) * 0.1
+    got = ops.fused_mlp(x, wg, wu, wd, block_t=16, block_f=32)
+    want = ref.fused_mlp_ref(x.reshape(-1, 32), wg, wu, wd).reshape(2, 40, 32)
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("Sq,H,KV,d,window,softcap", [
+    (64, 4, 4, 16, 0, 0.0),          # MHA full causal
+    (64, 4, 2, 16, 0, 0.0),          # GQA
+    (70, 4, 2, 16, 13, 0.0),         # SWA + ragged seq
+    (64, 8, 2, 32, 0, 50.0),         # softcap (gemma2)
+    (33, 2, 1, 8, 7, 30.0),          # everything at once, tiny blocks
+])
+def test_flash_attention_matches_ref(Sq, H, KV, d, window, softcap, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (2, Sq, H, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (2, Sq, KV, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (2, Sq, KV, d), jnp.float32).astype(dtype)
+    got = ops.flash_attention(q, k, v, window=window, softcap=softcap,
+                              block_q=32, block_k=32)
+    want = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), window=window, softcap=softcap
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("S,H,KV,d,block_s", [
+    (96, 4, 2, 16, 32),
+    (64, 4, 4, 32, 64),
+    (100, 8, 2, 16, 32),             # ragged cache length
+])
+def test_decode_attention_matches_ref(S, H, KV, d, block_s, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (2, 1, H, d), jnp.float32).astype(dtype)
+    kc = jax.random.normal(ks[1], (2, S, KV, d), jnp.float32).astype(dtype)
+    vc = jax.random.normal(ks[2], (2, S, KV, d), jnp.float32).astype(dtype)
+    kv_len = jnp.array([S // 3, S], jnp.int32)
+    got = ops.decode_attention(q, kc, vc, kv_len, block_s=block_s)
+    want = ref.decode_attention_ref(q.reshape(2, KV, H // KV, d), kc, vc,
+                                    kv_len).reshape(2, 1, H, d)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_flash_attention_matches_model_layer_oracle():
+    """The model's blocked_attention (pure JAX) and the Pallas kernel agree."""
+    from repro.models.layers import blocked_attention
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (2, 48, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (2, 48, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (2, 48, 2, 16), jnp.float32)
+    got = ops.flash_attention(q, k, v, block_q=16, block_k=16)
+    want = blocked_attention(q, k, v, q_block=16, kv_block=16)
+    np.testing.assert_allclose(got, want, atol=2e-4, rtol=2e-4)
+
+
+@pytest.mark.parametrize("S,bb,softcap", [(96, 16, 0.0), (100, 32, 0.0),
+                                          (64, 16, 30.0)])
+def test_packed_causal_matches_blocked(S, bb, softcap):
+    """The exact-causal tile-packing schedule (perf hillclimb C1) is
+    bit-compatible with the naive blocked schedule."""
+    from repro.models.layers import blocked_attention, packed_causal_attention
+    ks = jax.random.split(jax.random.PRNGKey(5), 3)
+    q = jax.random.normal(ks[0], (2, S, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (2, S, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (2, S, 2, 16), jnp.float32)
+    want = blocked_attention(q, k, v, q_block=bb, kv_block=bb,
+                             softcap=softcap)
+    got = packed_causal_attention(q, k, v, block=bb, softcap=softcap)
+    np.testing.assert_allclose(got, want, atol=3e-5, rtol=3e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("T,D,bt", [(64, 32, 32), (100, 48, 32), (8, 16, 8)])
+def test_rmsnorm_matches_ref(T, D, bt, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(6), 2)
+    x = jax.random.normal(ks[0], (T, D), jnp.float32).astype(dtype)
+    w = (jax.random.normal(ks[1], (D,), jnp.float32) * 0.1).astype(dtype)
+    got = ops.rmsnorm(x, w, block_t=bt)
+    want = ref.rmsnorm_ref(x, w)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_rmsnorm_matches_model_layer():
+    from repro.models.layers import rms_norm
+    x = jax.random.normal(jax.random.PRNGKey(7), (2, 24, 32), jnp.float32)
+    w = jax.random.normal(jax.random.PRNGKey(8), (32,), jnp.float32) * 0.1
+    got = ops.rmsnorm(x, w)
+    want = rms_norm(x, w)
+    np.testing.assert_allclose(got, want, atol=2e-5, rtol=2e-5)

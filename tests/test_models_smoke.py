@@ -1,0 +1,63 @@
+"""Per-arch smoke tests (assignment requirement): reduced config of the SAME
+family, one forward/train step on CPU, asserting shapes + finiteness."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import get_config, list_archs, reduce_config
+from repro.models.model import build, make_batch
+from repro.runtime.sharding import materialize
+
+ARCHS = list_archs()  # the assigned 10
+
+
+@pytest.fixture(scope="module")
+def built():
+    cache = {}
+
+    def get(arch):
+        if arch not in cache:
+            cfg = reduce_config(get_config(arch))
+            api = build(cfg)
+            params = materialize(jax.random.PRNGKey(0), api.defs(),
+                                 jnp.float32)
+            cache[arch] = (cfg, api, params)
+        return cache[arch]
+
+    return get
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_train_step_finite(arch, built):
+    cfg, api, params = built(arch)
+    batch = make_batch(cfg, 2, 64, jax.random.PRNGKey(1))
+    loss = api.train_loss(params, batch)
+    assert loss.shape == ()
+    assert bool(jnp.isfinite(loss)), f"{arch}: non-finite loss"
+    # gradients flow
+    g = jax.grad(lambda p: api.train_loss(p, batch))(params)
+    gnorm = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree_util.tree_leaves(g))
+    assert gnorm > 0, f"{arch}: zero gradient"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_shapes_and_finite(arch, built):
+    cfg, api, params = built(arch)
+    batch = make_batch(cfg, 2, 64, jax.random.PRNGKey(2), kind="prefill")
+    logits, aux = api.prefill(params, batch, kv_keep=32)
+    assert logits.shape == (2, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits))), f"{arch}: non-finite logits"
+    assert aux is not None
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_decode_step_shapes_and_finite(arch, built):
+    cfg, api, params = built(arch)
+    cache = api.init_cache(2, 128)
+    tok = jnp.array([1, 2], jnp.int32)
+    logits, cache2 = api.decode_step(params, tok, cache,
+                                     jnp.zeros(2, jnp.int32))
+    assert logits.shape == (2, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert jax.tree_util.tree_structure(cache) == \
+        jax.tree_util.tree_structure(cache2)

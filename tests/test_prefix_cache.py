@@ -1,0 +1,97 @@
+"""Prefix-cache unit + property tests (invariants from the module docstring)."""
+from hypothesis import given, strategies as st
+
+from repro.core.prefix_cache import PrefixCache, token_chain
+
+
+def chain_of(n_tokens, seed=0, block=4):
+    toks = [(seed * 1000 + i) % 97 for i in range(n_tokens)]
+    return token_chain(toks, block), toks
+
+
+def test_match_and_insert_basic():
+    c = PrefixCache(capacity_blocks=8, block_size=4)
+    chain, toks = chain_of(20)
+    assert c.match_len(chain) == 0
+    c.insert(chain, n_keep_tokens=20)
+    assert c.match_len(chain) == 20  # 5 blocks
+    # shared prefix of 8 tokens
+    toks2 = toks[:8] + [999] * 8
+    chain2 = token_chain(toks2, 4)
+    assert c.match_len(chain2) == 8
+
+
+def test_suffix_discard_budget():
+    c = PrefixCache(capacity_blocks=100, block_size=4)
+    chain, _ = chain_of(40)
+    c.insert(chain, n_keep_tokens=12)      # suffix discard at 12 tokens
+    assert c.match_len(chain) == 12
+    assert c.used_blocks == 3
+
+
+def test_lru_leaf_eviction_preserves_prefix_invariant():
+    c = PrefixCache(capacity_blocks=4, block_size=4)
+    a, _ = chain_of(16, seed=1)
+    c.insert(a, 16, now=1.0)
+    b, _ = chain_of(16, seed=2)
+    c.insert(b, 16, now=2.0)               # evicts a's blocks leaf-first
+    assert c.used_blocks <= 4
+    # invariant: every resident block's parent is resident
+    for h, blk in c.blocks.items():
+        assert blk.parent == 0 or blk.parent in c.blocks
+
+
+def test_pinned_blocks_survive_eviction():
+    c = PrefixCache(capacity_blocks=4, block_size=4)
+    a, _ = chain_of(16, seed=1)
+    c.insert(a, 16, now=1.0)
+    c.pin(a, 4)
+    b, _ = chain_of(32, seed=2)
+    c.insert(b, 32, now=2.0)               # can't evict pinned a
+    assert c.match_len(a) == 16
+    c.unpin(a, 4)
+    c.insert(b, 32, now=3.0)
+    assert c.match_len(b) > 0
+
+
+def test_zero_capacity_cache_never_stores():
+    c = PrefixCache(capacity_blocks=0, block_size=4)
+    a, _ = chain_of(16)
+    c.insert(a, 16)
+    assert c.used_blocks == 0
+    assert c.match_len(a) == 0
+
+
+@given(st.lists(st.tuples(st.integers(0, 9), st.integers(1, 48),
+                          st.integers(0, 48)), min_size=1, max_size=40),
+       st.integers(1, 10))
+def test_cache_invariants_under_random_ops(ops, capacity):
+    """Random insert/match sequences: capacity bound + parent-resident
+    invariant + match consistency always hold."""
+    c = PrefixCache(capacity_blocks=capacity, block_size=4)
+    now = 0.0
+    for seed, length, keep in ops:
+        chain, _ = chain_of(length, seed=seed)
+        now += 1.0
+        c.insert(chain, keep, now=now)
+        assert c.used_blocks <= capacity
+        for h, blk in c.blocks.items():
+            assert blk.parent == 0 or blk.parent in c.blocks, \
+                "orphan block (parent evicted before child)"
+        # match is block-granular and bounded by the chain itself
+        m = c.match_len(chain)
+        assert m % 4 == 0 and m <= (length // 4) * 4
+
+
+@given(st.integers(1, 60), st.integers(1, 60), st.integers(1, 8))
+def test_match_is_block_granular_common_prefix(n1, n2, block):
+    toks1 = list(range(n1))
+    toks2 = list(range(min(n1, n2))) + [777] * max(0, n2 - n1)
+    c = PrefixCache(capacity_blocks=100, block_size=block)
+    ch1 = token_chain(toks1, block)
+    ch2 = token_chain(toks2, block)
+    c.insert(ch1, n1)
+    m = c.match_len(ch2)
+    common = min(n1, n2) if n2 <= n1 else min(n1, n2)
+    assert m <= (common // block) * block
+    assert m % block == 0

@@ -1,0 +1,114 @@
+"""Scheduling tests — including the paper's §6.2/§6.3 A/B/C/D example:
+continuous JCT calibration schedules A, D, C, B and harvests strictly more
+prefix-cache hits than FIFO or arrival-frozen SRJF."""
+from typing import List
+
+from repro.core.jct import LinearProxyJCT
+from repro.core.prefix_cache import PrefixCache, token_chain
+from repro.core.scheduler import Request, Scheduler
+
+BLOCK = 4
+
+
+def _req(tokens, arrival=0.0, user=None):
+    return Request(n_input=len(tokens), arrival=arrival,
+                   chain=token_chain(tokens, BLOCK), tokens=tokens,
+                   user_id=user)
+
+
+def _run(queue: List[Request], policy: str, capacity_blocks: int,
+         lam: float = 0.0):
+    """Mini engine loop: pick -> count hit -> insert (whole request)."""
+    cache = PrefixCache(capacity_blocks, BLOCK)
+    sched = Scheduler(policy, LinearProxyJCT(a=1.0, b=0.0), lam=lam)
+    for r in queue:
+        r.n_cached_at_arrival = cache.match_len(r.chain)
+    order, hits = [], {}
+    now = 0.0
+    q = list(queue)
+    while q:
+        i = sched.pick(q, cache, now)
+        r = q.pop(i)
+        hits[r.user_id] = cache.match_len(r.chain, now, touch=True)
+        cache.pin(r.chain, hits[r.user_id] // BLOCK)
+        cache.insert(r.chain, r.n_input, now=now)
+        cache.unpin(r.chain, hits[r.user_id] // BLOCK)
+        order.append(r.user_id)
+        now += 1.0
+    return order, hits
+
+
+def _paper_requests():
+    """A < C < B < D; A,D share a long profile prefix (P1), B,C share P2 —
+    the recommendation-workload shape: long shared profile, short suffix."""
+    P1 = list(range(100, 140))           # 40 tokens
+    P2 = list(range(200, 248))           # 48 tokens
+    A = _req(P1 + [1] * 4, arrival=0.000, user="A")     # 44
+    B = _req(P2 + [3] * 12, arrival=0.001, user="B")    # 60
+    C = _req(P2 + [2] * 4, arrival=0.002, user="C")     # 52
+    D = _req(P1 + [4] * 24, arrival=0.003, user="D")    # 64
+    return [A, B, C, D]                  # arrival order
+
+
+def test_paper_example_calibrated_order_and_hits():
+    # capacity = one largest request (the paper's "one request" cache)
+    order, hits = _run(_paper_requests(), "srjf_calibrated", 60 // BLOCK)
+    assert order == ["A", "D", "C", "B"], order      # §6.3 walkthrough
+    assert hits["D"] == 40 and hits["B"] == 48       # two full-prefix hits
+    assert sum(1 for v in hits.values() if v > 0) == 2
+
+
+def test_paper_example_baselines_get_exactly_one_hit():
+    """Paper §6.3: total cache hits is 1 for FIFO and naive SRJF, 2 with
+    continuous calibration."""
+    _, hits_cal = _run(_paper_requests(), "srjf_calibrated", 60 // BLOCK)
+    _, hits_srjf = _run(_paper_requests(), "srjf", 60 // BLOCK)
+    _, hits_fifo = _run(_paper_requests(), "fifo", 60 // BLOCK)
+    assert sum(1 for v in hits_cal.values() if v > 0) == 2
+    assert sum(1 for v in hits_srjf.values() if v > 0) == 1
+    assert sum(1 for v in hits_fifo.values() if v > 0) == 1
+
+
+def test_naive_srjf_schedules_by_arrival_jct():
+    order, _ = _run(_paper_requests(), "srjf", 60 // BLOCK)
+    assert order == ["A", "C", "B", "D"]             # §6.2: pure length order
+
+
+def test_fifo_schedules_by_arrival():
+    order, _ = _run(_paper_requests(), "fifo", 60 // BLOCK)
+    assert order == ["A", "B", "C", "D"]
+
+
+def test_lambda_prevents_starvation():
+    """A stream of short jobs must not starve one long job when λ > 0."""
+    jct = LinearProxyJCT(a=1.0, b=0.0)
+    cache = PrefixCache(0, BLOCK)
+    long_req = _req([9] * 100, arrival=0.0, user="long")
+    q = [long_req]
+    # λ = 0: long job loses to every short job forever
+    sched0 = Scheduler("srjf_calibrated", jct, lam=0.0)
+    schedL = Scheduler("srjf_calibrated", jct, lam=5.0)
+    # a stream of FRESH short jobs keeps arriving (arrival ~ now)
+    for t in range(30):
+        q.append(_req([t] * 10, arrival=29.9, user=f"s{t}"))
+    # with λ=0 the long job is never picked while shorts exist
+    i = sched0.pick(q, cache, now=30.0)
+    assert q[i].user_id != "long"
+    # with λ large enough, waiting time wins
+    i = schedL.pick(q, cache, now=30.0)
+    assert q[i].user_id == "long"
+
+
+def test_calibration_reacts_to_cache_contents():
+    """Algorithm 1: a request becomes preferred the moment its prefix lands
+    in the cache, without re-submission."""
+    jct = LinearProxyJCT(a=1.0, b=0.0)
+    sched = Scheduler("srjf_calibrated", jct)
+    cache = PrefixCache(100, BLOCK)
+    short = _req([1] * 20, user="short")
+    long_shared = _req(list(range(64)) + [2] * 8, user="long")
+    q = [short, long_shared]
+    assert q[sched.pick(q, cache, 0.0)].user_id == "short"
+    cache.insert(token_chain(list(range(64)), BLOCK), 64)
+    # now long's miss count is 72-64=8 < short's 20
+    assert q[sched.pick(q, cache, 0.0)].user_id == "long"
