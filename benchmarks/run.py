@@ -9,6 +9,7 @@
   fairness       Fig 11    λ sweep (mean/p50/p99)
   jct_fit        §6.3      JCT linear-proxy Pearson r (analytic + measured)
   kernels_bench  —         host-side micro-benchmarks (scheduler, cache, oracles)
+  packing        —         prepacked vs bucketed-solo prefill throughput
   roofline       §Roofline dry-run derived terms (reads results/dryrun/*.json)
 
 Run everything:   PYTHONPATH=src python -m benchmarks.run
@@ -25,7 +26,7 @@ from benchmarks.common import emit
 
 MODULES = ["mil_table", "qps_latency", "throughput", "interconnect",
            "mil_ablation", "fairness", "jct_fit", "kernels_bench",
-           "roofline"]
+           "packing", "roofline"]
 
 
 def main() -> None:

@@ -118,6 +118,23 @@ def chunked_softmax_xent(hidden: jax.Array, w_head: jax.Array,
     return loss, cnt
 
 
+def packed_last_logits(hidden: jax.Array, w_head: jax.Array,
+                       last_indices: jax.Array,
+                       final_softcap: float = 0.0) -> jax.Array:
+    """Prefill-only LM head for a PREPACKED batch: one logits row per packed
+    segment. ``last_indices`` (N,) are flat indices into the flattened
+    (B*S,) token axis — for the engine's B==1 layout, simply each segment's
+    last packed position. Projects only N rows (N << S)."""
+    B, S, D = hidden.shape
+    flat = hidden.reshape(B * S, D)
+    last = jnp.take(flat, last_indices.astype(jnp.int32), axis=0)   # (N, D)
+    logits = jnp.einsum("nd,dv->nv", last, w_head,
+                        preferred_element_type=jnp.float32)
+    if final_softcap:
+        logits = final_softcap * jnp.tanh(logits / final_softcap)
+    return logits
+
+
 def last_token_logits(hidden: jax.Array, w_head: jax.Array,
                       last_index: Optional[jax.Array] = None,
                       final_softcap: float = 0.0) -> jax.Array:

@@ -32,11 +32,34 @@ def pearson(xs: Sequence[float], ys: Sequence[float]) -> float:
 
 
 class LinearProxyJCT:
-    """jct ≈ a * miss_tokens + b (the paper's default proxy)."""
+    """jct ≈ a * miss_tokens + b (the paper's default proxy).
 
-    def __init__(self, a: float = 1e-4, b: float = 0.0):
+    ``observe`` keeps the proxy calibrated online: the engine reports every
+    executed step as (tokens, cached, wall-seconds) — a PREPACKED batch
+    reports its *total packed tokens*, so the model learns packed-batch cost
+    on the same miss-token axis and Algorithm 1's scores stay comparable
+    between solo and packed execution. Refits over a sliding window every
+    ``refit_every`` observations (cheap: 2-param lstsq).
+    """
+
+    def __init__(self, a: float = 1e-4, b: float = 0.0, window: int = 256,
+                 refit_every: int = 16):
         self.a, self.b = a, b
         self.pearson_r: float = 1.0
+        self.window = window
+        self.refit_every = refit_every
+        self._recent: List[Sample] = []
+        self._since_fit = 0
+
+    def observe(self, n_input: int, n_cached: int, seconds: float) -> None:
+        """Record one executed step; refit periodically."""
+        self._recent.append((n_input, n_cached, seconds))
+        if len(self._recent) > self.window:
+            del self._recent[: len(self._recent) - self.window]
+        self._since_fit += 1
+        if self._since_fit >= self.refit_every and len(self._recent) >= 4:
+            self.fit(self._recent)
+            self._since_fit = 0
 
     def fit(self, samples: Sequence[Sample]) -> "LinearProxyJCT":
         miss = np.array([s[0] - s[1] for s in samples], np.float64)

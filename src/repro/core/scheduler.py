@@ -8,8 +8,15 @@ Policies:
                    cache before every scheduling decision, minus the
                    starvation offset λ·T_queue  (Algorithm 1)
 
-PrefillOnly schedules exactly ONE request per step (§6.1: prefill is
-compute-bound; batching adds latency without throughput).
+PrefillOnly's baseline executes ONE request per step (§6.1: prefill is
+compute-bound; naive batching adds latency without throughput). The engine's
+prepacked path refines this: ``pick`` still chooses the single next request
+by Algorithm 1 — preserving SRJF-calibrated order — and the engine then
+*backfills* the chosen request's padding slack with further cache-miss
+requests (segment-restricted attention keeps them independent), which adds
+throughput without the latency cost §6.1 warns about because the packed
+batch finishes in the same bucketed forward the anchor alone would have
+paid for.
 """
 from __future__ import annotations
 
@@ -50,6 +57,14 @@ class Scheduler:
         self.jct_model = jct_model
         self.lam = lam
 
+    def score(self, r: Request, cache, now: float) -> float:
+        """Algorithm 1 priority of one request (lower runs sooner)."""
+        if self.policy == "srjf":
+            return self.jct_model.predict(r.n_input, r.n_cached_at_arrival)
+        n_cached = cache.match_len(r.chain) if cache is not None else 0
+        jct = self.jct_model.predict(r.n_input, n_cached)
+        return jct - self.lam * (now - r.arrival)
+
     def pick(self, queue: List[Request], cache, now: float) -> Optional[int]:
         """Returns the index into ``queue`` of the request to run next.
 
@@ -64,14 +79,7 @@ class Scheduler:
                                                          queue[i].req_id))
         best_i, best_score = None, None
         for i, r in enumerate(queue):
-            if self.policy == "srjf":
-                jct = self.jct_model.predict(r.n_input, r.n_cached_at_arrival)
-                score = jct
-            else:
-                n_cached = cache.match_len(r.chain) if cache is not None else 0
-                jct = self.jct_model.predict(r.n_input, n_cached)
-                score = jct - self.lam * (now - r.arrival)
-            key = (score, r.arrival, r.req_id)     # deterministic tie-break
-            if best_score is None or key < best_score:
+            key = (self.score(r, cache, now), r.arrival, r.req_id)
+            if best_score is None or key < best_score:   # deterministic ties
                 best_score, best_i = key, i
         return best_i

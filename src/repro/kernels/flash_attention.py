@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: blocked causal flash attention (GQA / SWA / softcap).
+"""Pallas TPU kernel: blocked causal flash attention (GQA / SWA / softcap /
+segment-restricted prepacking).
 
 Hybrid prefilling's counterpart guarantee (paper §4): attention is NOT
 chunked — each (q-block, kv-block) tile streams through VMEM with online
@@ -13,6 +14,15 @@ resolved in the BlockSpec index_map (h // group), so HBM holds only
 Grid: (B, H, nq, nk), kv innermost. Causal + sliding-window block skipping
 happens via ``pl.when`` on whole tiles — off-diagonal masked tiles cost 0
 FLOPs (the structural half-compute win the dry-run hillclimb measures).
+
+Prepacked prefill (arXiv:2404.09529 / BatchLLM): optional per-token
+``seg_q``/``seg_k`` id arrays restrict attention to same-segment pairs so N
+short requests share one contiguous forward. Tile skipping extends to
+segments: a (q-block, kv-block) tile whose segment-id *ranges* cannot
+intersect is skipped by the same ``pl.when`` mechanism as the causal skip,
+so cross-segment tiles also cost 0 FLOPs. Padding tokens carry a negative
+segment id, which doubles as the padded-KV mask (``kv_valid`` handles the
+unsegmented case).
 """
 from __future__ import annotations
 
@@ -26,8 +36,17 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
-def _make_kernel(bq, bk, nk, window, softcap, scale, causal):
-    def kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref):
+def _make_kernel(bq, bk, nk, window, softcap, scale, causal, kv_valid,
+                 segmented, tile_map):
+    def kernel(*refs):
+        it = iter(refs)
+        q_ref, k_ref, v_ref = next(it), next(it), next(it)
+        sq_ref = next(it) if segmented else None
+        sk_ref = next(it) if segmented else None
+        o_ref = next(it)
+        map_ref = next(it) if tile_map else None
+        m_ref, l_ref, acc_ref = next(it), next(it), next(it)
+
         i = pl.program_id(2)
         j = pl.program_id(3)
 
@@ -42,6 +61,22 @@ def _make_kernel(bq, bk, nk, window, softcap, scale, causal):
             run = run & (j * bk <= i * bq + bq - 1)
         if window > 0:
             run = run & (j * bk + bk - 1 >= i * bq - window + 1)
+        if kv_valid is not None:
+            run = run & (j * bk < kv_valid)
+        if segmented:
+            # Packed layouts keep each segment contiguous, so a tile computes
+            # real work only if the q-block's and kv-block's segment-id ranges
+            # intersect AND the kv-block holds at least one real (id >= 0)
+            # token. Data-dependent, but pl.when lowers it to a branch the
+            # same way as the structural causal skip.
+            sq = sq_ref[0]                                  # (bq,)
+            sk = sk_ref[0]                                  # (bk,)
+            run = run & (jnp.min(sq) <= jnp.max(sk))
+            run = run & (jnp.max(sq) >= jnp.min(sk))
+            run = run & (jnp.max(sk) >= 0)
+
+        if tile_map:
+            map_ref[0, 0, 0] = run.astype(jnp.int32)
 
         @pl.when(run)
         def _compute():
@@ -59,6 +94,13 @@ def _make_kernel(bq, bk, nk, window, softcap, scale, causal):
                 mask &= qpos >= kpos
             if window > 0:
                 mask &= (qpos - kpos) < window
+            if kv_valid is not None:
+                mask &= kpos < kv_valid
+            if segmented:
+                sq = sq_ref[0]
+                sk = sk_ref[0]
+                mask &= sq[:, None] == sk[None, :]
+                mask &= sk[None, :] >= 0
             s = jnp.where(mask, s, NEG_INF)
             m_prev = m_ref[...]                              # (bq, 1)
             m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
@@ -83,37 +125,71 @@ def _make_kernel(bq, bk, nk, window, softcap, scale, causal):
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, window: int = 0,
                     softcap: float = 0.0, scale: float | None = None,
+                    kv_valid: int | None = None,
+                    seg_q: jax.Array | None = None,
+                    seg_k: jax.Array | None = None,
                     block_q: int = 256, block_k: int = 256,
-                    interpret: bool = True) -> jax.Array:
+                    debug_tile_map: bool = False,
+                    interpret: bool = True):
     """q: (B, H, Sq, d); k/v: (B, KV, Sk, d) with H % KV == 0 -> (B, H, Sq, d).
 
-    Caller guarantees Sq % block_q == 0 and Sk % block_k == 0 (ops.py pads
-    with fully-masked positions)."""
+    ``kv_valid``: number of real kv columns (static); columns >= kv_valid are
+    padding and are masked regardless of ``causal`` (ops.py pads to block
+    multiples). ``seg_q``/``seg_k``: (B, Sq)/(B, Sk) int32 per-token segment
+    ids for prepacked batches; attention is restricted to ``seg_q == seg_k``
+    (composed with causal/window, which use *packed* positions — valid within
+    a segment because segments are contiguous). Negative ids mark padding.
+
+    ``debug_tile_map=True`` additionally returns a (B, nq, nk) int32 map of
+    tiles that executed (1) vs were skipped (0) — test/diagnostic only.
+
+    Caller guarantees Sq % block_q == 0 and Sk % block_k == 0."""
     B, H, Sq, d = q.shape
     _, KV, Sk, _ = k.shape
     group = H // KV
     bq, bk = min(block_q, Sq), min(block_k, Sk)
     assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
+    segmented = seg_q is not None
+    assert segmented == (seg_k is not None), "seg_q and seg_k come together"
     nq, nk = Sq // bq, Sk // bk
     if scale is None:
         scale = d ** -0.5
-    kernel = _make_kernel(bq, bk, nk, window, softcap, scale, causal)
-    return pl.pallas_call(
+    if kv_valid is not None and kv_valid >= Sk:
+        kv_valid = None                     # no padded kv columns: no masking
+    kernel = _make_kernel(bq, bk, nk, window, softcap, scale, causal,
+                          kv_valid, segmented, debug_tile_map)
+    in_specs = [
+        pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
+        pl.BlockSpec((1, 1, bk, d),
+                     lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+        pl.BlockSpec((1, 1, bk, d),
+                     lambda b, h, i, j, g=group: (b, h // g, j, 0)),
+    ]
+    args = [q, k, v]
+    if segmented:
+        in_specs.append(pl.BlockSpec((1, bq), lambda b, h, i, j: (b, i)))
+        in_specs.append(pl.BlockSpec((1, bk), lambda b, h, i, j: (b, j)))
+        args += [seg_q.astype(jnp.int32), seg_k.astype(jnp.int32)]
+    out_specs = pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0))
+    out_shape = jax.ShapeDtypeStruct((B, H, Sq, d), q.dtype)
+    if debug_tile_map:
+        out_specs = [out_specs,
+                     pl.BlockSpec((1, 1, 1), lambda b, h, i, j: (b, i, j))]
+        out_shape = [out_shape,
+                     jax.ShapeDtypeStruct((B, nq, nk), jnp.int32)]
+    out = pl.pallas_call(
         kernel,
         grid=(B, H, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
-            pl.BlockSpec((1, 1, bk, d),
-                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
-            pl.BlockSpec((1, 1, bk, d),
-                         lambda b, h, i, j, g=group: (b, h // g, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((B, H, Sq, d), q.dtype),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
         scratch_shapes=[
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, 1), jnp.float32),
             pltpu.VMEM((bq, d), jnp.float32),
         ],
         interpret=interpret,
-    )(q, k, v)
+    )(*args)
+    if debug_tile_map:
+        return out[0], out[1]
+    return out

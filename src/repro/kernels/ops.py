@@ -64,11 +64,47 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     qt = _pad_dim(qt, 2, bq)
     kt = _pad_dim(kt, 2, bk)
     vt = _pad_dim(vt, 2, bk)
-    # padded kv columns must not contribute: rely on causal mask (padded
-    # q rows are discarded; padded k rows have kpos > every real qpos)
+    # padded kv columns must not contribute: mask them explicitly via
+    # kv_valid — the causal mask alone covers them only when causal=True
+    # (padded k rows have kpos > every real qpos), not for causal=False
     out = _flash_kernel(qt, kt, vt, causal=causal, window=window,
-                        softcap=softcap, scale=d ** -0.5, block_q=bq,
-                        block_k=bk, interpret=not _on_tpu())
+                        softcap=softcap, scale=d ** -0.5, kv_valid=Sk,
+                        block_q=bq, block_k=bk, interpret=not _on_tpu())
+    return out[:, :, :Sq].transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "window", "softcap", "block_q", "block_k"))
+def packed_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                           seg_ids: jax.Array, *, window: int = 0,
+                           softcap: float = 0.0, block_q: int = 256,
+                           block_k: int = 256) -> jax.Array:
+    """Segment-restricted causal self-attention over a prepacked sequence.
+
+    Layout: q (B, S, H, d), k/v (B, S, KV, d), seg_ids (B, S) int32 — the
+    per-token segment index of each packed request (negative = padding).
+    Attention is causal *within* each segment and zero across segments;
+    cross-segment tiles are skipped inside the kernel (0 FLOPs).
+    """
+    B, Sq, H, d = q.shape
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sq)
+    qt = _pad_dim(qt, 2, bq)
+    kt = _pad_dim(kt, 2, bk)
+    vt = _pad_dim(vt, 2, bk)
+    # pad segment ids with -1: padded tokens match nothing (real ids >= 0)
+    seg = seg_ids.astype(jnp.int32)
+    seg_q = jnp.pad(seg, ((0, 0), (0, qt.shape[2] - Sq)),
+                    constant_values=-1)
+    seg_k = jnp.pad(seg, ((0, 0), (0, kt.shape[2] - Sq)),
+                    constant_values=-1)
+    out = _flash_kernel(qt, kt, vt, causal=True, window=window,
+                        softcap=softcap, scale=d ** -0.5,
+                        seg_q=seg_q, seg_k=seg_k, block_q=bq, block_k=bk,
+                        interpret=not _on_tpu())
     return out[:, :, :Sq].transpose(0, 2, 1, 3)
 
 

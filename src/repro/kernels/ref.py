@@ -44,6 +44,40 @@ def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       vv.astype(jnp.float32)).astype(q.dtype)
 
 
+def packed_flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                               seg_ids: jax.Array, *, window: int = 0,
+                               softcap: float = 0.0,
+                               scale: float | None = None) -> jax.Array:
+    """Prepacked segment-restricted causal attention, naive softmax.
+
+    q: (B, H, S, d); k/v: (B, KV, S, d); seg_ids: (B, S) int32 (< 0 = pad)
+    -> (B, H, S, d). Causal within segments, zero across them.
+    """
+    B, H, S, d = q.shape
+    KV = k.shape[1]
+    group = H // KV
+    if scale is None:
+        scale = d ** -0.5
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   kk.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(S)[:, None]
+    kpos = jnp.arange(S)[None, :]
+    mask = qpos >= kpos
+    if window > 0:
+        mask &= (qpos - kpos) < window
+    seg = seg_ids.astype(jnp.int32)
+    segm = (seg[:, :, None] == seg[:, None, :]) & (seg[:, None, :] >= 0)
+    mask = mask[None] & segm                       # (B, S, S)
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      vv.astype(jnp.float32)).astype(q.dtype)
+
+
 def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                          kv_len: jax.Array, *, softcap: float = 0.0,
                          scale: float | None = None) -> jax.Array:

@@ -68,16 +68,25 @@ def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       causal: bool = True, window: int = 0,
                       softcap: float = 0.0, q_offset: int = 0,
                       q_block: int = 512, kv_block: int = 1024,
-                      head_scale: Optional[float] = None) -> jax.Array:
+                      head_scale: Optional[float] = None,
+                      seg_ids: Optional[jax.Array] = None) -> jax.Array:
     """Flash-style attention. q: (B,Sq,H,d), k/v: (B,Skv,KV,d) -> (B,Sq,H,d).
 
     Online-softmax over KV blocks (lax.scan) x lax.map over Q blocks: the HLO
     holds at most (qb, kb) logits per (batch, head) at a time.
+
+    ``seg_ids`` (B, S) int32 enables prepacked prefill: attention is
+    restricted to same-segment (q, k) pairs, so N packed requests attend only
+    to themselves (negative ids mark padding). Self-attention only (Sq==Skv);
+    causal/window masks use packed positions, which agree with per-segment
+    positions because segments are contiguous.
     """
     B, Sq, H, d = q.shape
     _, Skv, KV, _ = k.shape
     G = H // KV
     scale = head_scale if head_scale is not None else 1.0 / math.sqrt(d)
+    if seg_ids is not None:
+        assert Sq == Skv, "segment-restricted attention is self-attention"
 
     qb = min(q_block, Sq)
     kb = min(kv_block, Skv)
@@ -89,6 +98,11 @@ def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     if pad_k:
         k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    seg_q = seg_k = None
+    if seg_ids is not None:
+        seg = seg_ids.astype(jnp.int32)
+        seg_q = jnp.pad(seg, ((0, 0), (0, pad_q)), constant_values=-1)
+        seg_k = jnp.pad(seg, ((0, 0), (0, pad_k)), constant_values=-1)
     nq, nk = q.shape[1] // qb, k.shape[1] // kb
     qg = q.reshape(B, nq, qb, KV, G, d)
     kv_len = jnp.asarray(Skv)  # mask out k-padding
@@ -96,27 +110,57 @@ def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     def one_q_block(i):
         q_blk = qg[:, i].astype(jnp.float32) * scale      # (B,qb,KV,G,d)
         qpos = q_offset + i * qb + jnp.arange(qb)
+        sq_blk = (jax.lax.dynamic_slice_in_dim(seg_q, i * qb, qb, axis=1)
+                  if seg_q is not None else None)
 
         def kv_step(carry, j):
-            m, l, acc = carry
             k_j = jax.lax.dynamic_slice_in_dim(k, j * kb, kb, axis=1)
             v_j = jax.lax.dynamic_slice_in_dim(v, j * kb, kb, axis=1)
             kpos = j * kb + jnp.arange(kb)
-            s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk,
-                           k_j.astype(jnp.float32))        # (B,KV,G,qb,kb)
-            if softcap:
-                s = softcap * jnp.tanh(s / softcap)
+            sk_blk = (jax.lax.dynamic_slice_in_dim(seg_k, j * kb, kb, axis=1)
+                      if sq_blk is not None else None)
+
+            def compute(carry):
+                m, l, acc = carry
+                s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk,
+                               k_j.astype(jnp.float32))    # (B,KV,G,qb,kb)
+                if softcap:
+                    s = softcap * jnp.tanh(s / softcap)
+                if causal:
+                    s = _apply_mask(s, qpos, kpos, kv_len, window)
+                else:
+                    s = jnp.where((kpos < kv_len)[None, :], s, NEG_INF)
+                if sq_blk is not None:
+                    segm = ((sq_blk[:, :, None] == sk_blk[:, None, :])
+                            & (sk_blk[:, None, :] >= 0))   # (B, qb, kb)
+                    s = jnp.where(segm[:, None, None], s, NEG_INF)
+                m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+                p = jnp.exp(s - m_new[..., None])
+                corr = jnp.exp(m - m_new)
+                l_new = l * corr + jnp.sum(p, axis=-1)
+                pv = jnp.einsum("bkgqs,bskd->bkgqd", p,
+                                v_j.astype(jnp.float32))
+                acc_new = acc * corr[..., None] + pv
+                return m_new, l_new, acc_new
+
+            # tile-level skipping (XLA twin of the Pallas kernel's pl.when):
+            # a tile that the causal/window/kv-padding/segment masks would
+            # fully erase contributes exactly nothing to the online softmax
+            # (exp underflows to 0 against any live row max), so branch it
+            # out with lax.cond — fully-masked tiles cost 0 FLOPs. This is
+            # what turns prepacked batches into sum-of-segment attention
+            # cost instead of quadratic-in-packed-length.
+            live = jnp.asarray(True)
             if causal:
-                s = _apply_mask(s, qpos, kpos, kv_len, window)
-            else:
-                s = jnp.where((kpos < kv_len)[None, :], s, NEG_INF)
-            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
-            p = jnp.exp(s - m_new[..., None])
-            corr = jnp.exp(m - m_new)
-            l_new = l * corr + jnp.sum(p, axis=-1)
-            pv = jnp.einsum("bkgqs,bskd->bkgqd", p, v_j.astype(jnp.float32))
-            acc_new = acc * corr[..., None] + pv
-            return (m_new, l_new, acc_new), None
+                live = live & (j * kb <= qpos[-1])
+            if window > 0:
+                live = live & (j * kb + kb - 1 > qpos[0] - window)
+            live = live & (j * kb < kv_len)
+            if sq_blk is not None:
+                live = live & (jnp.min(sq_blk) <= jnp.max(sk_blk))
+                live = live & (jnp.max(sq_blk) >= jnp.min(sk_blk))
+                live = live & (jnp.max(sk_blk) >= 0)
+            return jax.lax.cond(live, compute, lambda c: c, carry), None
 
         m0 = jnp.full((B, KV, G, qb), NEG_INF, jnp.float32)
         l0 = jnp.zeros((B, KV, G, qb), jnp.float32)
@@ -324,16 +368,28 @@ def _context_parallel_attention(q, k, v, *, window: int, softcap: float,
 
 def attention_prefill(p: Dict, x: jax.Array, cfg: ModelConfig, *,
                       positions: jax.Array, window: int = 0,
-                      chunk: int = 0) -> Tuple[jax.Array, jax.Array, jax.Array]:
+                      chunk: int = 0, seg_ids: Optional[jax.Array] = None
+                      ) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Full-sequence attention. Returns (out, k, v) — the caller decides how
-    much of (k, v) to keep (suffix KV discard happens there)."""
+    much of (k, v) to keep (suffix KV discard happens there).
+
+    ``seg_ids`` selects the prepacked path: segment-restricted blocked
+    attention (single instance — the context-parallel and tile-packing
+    schedules assume one contiguous causal sequence)."""
     from repro.runtime.sharding import _CTX
     B, S, D = x.shape
     q, k, v = _qkv_project(p, x, cfg, positions, chunk)
     rules = _CTX.rules or {}
     cp = (_CTX.mesh is not None and rules.get("attn_seq") == "model"
           and S % _CTX.mesh.shape.get("model", 1) == 0)
-    if cp:
+    if seg_ids is not None:
+        # segment-scale tiles: tile-level skipping only pays off when blocks
+        # are no bigger than typical packed segments — with the default
+        # (512, 1024) blocks a 1k packed batch is ONE tile and nothing skips
+        out = blocked_attention(q, k, v, window=window,
+                                softcap=cfg.attn_softcap, seg_ids=seg_ids,
+                                q_block=128, kv_block=128)
+    elif cp:
         out = _context_parallel_attention(
             q, k, v, window=window, softcap=cfg.attn_softcap, mesh=_CTX.mesh)
     elif cfg.packed_attention and window == 0:

@@ -13,7 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
-from repro.core.hybrid_prefill import chunked_softmax_xent, last_token_logits
+from repro.core.hybrid_prefill import (chunked_softmax_xent,
+                                       last_token_logits,
+                                       packed_last_logits)
 from repro.models import layers as L
 from repro.models.moe import moe_defs, moe_apply
 from repro.runtime.sharding import pdef, ParamDef, is_paramdef_leaf
@@ -88,11 +90,13 @@ def _cast_block(bp: Dict, dtype) -> Dict:
 
 def _block_full(bp: Dict, x: jax.Array, cfg: ModelConfig, *,
                 positions: jax.Array, window: int, chunk: int,
-                num_shards: int) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
+                num_shards: int, seg_ids: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, Tuple[jax.Array, jax.Array]]:
     bp = _cast_block(bp, cfg.dtype)
     h = L.rms_norm(x, bp["ln1"])
     attn, k, v = L.attention_prefill(bp["attn"], h, cfg, positions=positions,
-                                     window=window, chunk=chunk)
+                                     window=window, chunk=chunk,
+                                     seg_ids=seg_ids)
     x = x + attn
     h = L.rms_norm(x, bp["ln2"])
     if cfg.is_moe:
@@ -107,12 +111,25 @@ def forward_full(params: Dict, cfg: ModelConfig, *,
                  tokens: Optional[jax.Array] = None,
                  embeds: Optional[jax.Array] = None,
                  kv_keep: int = 0, num_shards: int = 1,
-                 remat: bool = False) -> Tuple[jax.Array, Optional[Dict]]:
+                 remat: bool = False,
+                 positions: Optional[jax.Array] = None,
+                 seg_ids: Optional[jax.Array] = None,
+                 kv_indices: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, Optional[Dict]]:
     """Returns (final-normed hidden (B,S,D), kv tree or None).
 
     ``kv_keep`` is the PrefillOnly prefix budget: only the first ``kv_keep``
     tokens' KV leave each layer (suffix KV discard — the rest is freed by XLA
     as soon as the layer's attention is done, because it is not a scan output).
+
+    Prepacked prefill: ``positions`` (B, S) overrides the default arange —
+    packed batches restart RoPE positions at every segment boundary — and
+    ``seg_ids`` (B, S) restricts attention to same-segment pairs.
+    ``kv_indices`` (K,) generalizes the prefix budget for packed batches:
+    each layer's KV scan output is the GATHER of those token positions
+    instead of a prefix slice, so per-segment keep windows scattered through
+    the packed sequence cost K stacked tokens, not S (suffix discard keeps
+    its memory bound under packing). Overrides ``kv_keep`` when given.
     """
     dtype = jnp.dtype(cfg.dtype)
     if embeds is None:
@@ -122,18 +139,26 @@ def forward_full(params: Dict, cfg: ModelConfig, *,
     else:
         x = embeds.astype(dtype)
     B, S, _ = x.shape
-    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
     chunk = cfg.hybrid_chunk
     keep = min(kv_keep, S)
+    if kv_indices is not None:
+        keep = kv_indices.shape[0]     # drives only the kv-is-kept checks
 
     def run_block(x, bp, window):
         x, (k, v) = _block_full(bp, x, cfg, positions=positions,
                                 window=window, chunk=chunk,
-                                num_shards=num_shards)
+                                num_shards=num_shards, seg_ids=seg_ids)
         # keep the prefix KV in compute dtype — rope's f32 internals must
         # not leak into the (layers, B, keep, KV, hd) scan output stack
-        kv = ((k[:, :keep].astype(dtype), v[:, :keep].astype(dtype))
-              if keep > 0 else None)
+        if kv_indices is not None:
+            kv = (jnp.take(k, kv_indices, axis=1).astype(dtype),
+                  jnp.take(v, kv_indices, axis=1).astype(dtype))
+        elif keep > 0:
+            kv = (k[:, :keep].astype(dtype), v[:, :keep].astype(dtype))
+        else:
+            kv = None
         return x, kv
 
     if cfg.local_global:
@@ -221,6 +246,40 @@ def prefill(params: Dict, cfg: ModelConfig, batch: Dict, *,
     logits = last_token_logits(hidden, head_weight(params, cfg),
                                last_index=last_index,
                                final_softcap=cfg.final_softcap)
+    return logits, kv
+
+
+def prefill_packed(params: Dict, cfg: ModelConfig, tokens: jax.Array,
+                   seg_ids: jax.Array, positions: jax.Array,
+                   last_indices: jax.Array, *, kv_keep: int = 0,
+                   num_shards: int = 1,
+                   kv_indices: Optional[jax.Array] = None
+                   ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Prepacked prefill: N requests packed into ONE contiguous sequence.
+
+    tokens/seg_ids/positions: (1, S) — the packed sequence, its per-token
+    segment index (negative = padding slack), and per-token positions that
+    restart at 0 on every segment boundary (RoPE sees each request at its
+    own offsets). ``last_indices``: (N,) packed index of each segment's last
+    token. Returns (per-segment last-token logits (N, V), KV tree: the first
+    ``kv_keep`` packed tokens, or — preferred for suffix discard, which is
+    per-segment rather than a packed-sequence prefix — the gather of
+    ``kv_indices`` (K,) packed positions, which the caller slices per
+    segment for cache inserts at solo-path memory cost (K kept tokens, not
+    S).
+
+    Attention is causal within each segment and zero across segments, so the
+    result matches N independent ``prefill`` calls while the MXU sees one
+    dense sequence (prepacking, arXiv:2404.09529): padding-bucket waste is
+    recovered as throughput, which PrefillOnly's single-token output makes
+    safe — each request needs only its own last-row logits.
+    """
+    hidden, kv = forward_full(params, cfg, tokens=tokens, kv_keep=kv_keep,
+                              num_shards=num_shards, positions=positions,
+                              seg_ids=seg_ids, kv_indices=kv_indices)
+    logits = packed_last_logits(hidden, head_weight(params, cfg),
+                                last_indices,
+                                final_softcap=cfg.final_softcap)
     return logits, kv
 
 

@@ -1,0 +1,368 @@
+"""Prepacked prefill: segment-restricted attention equivalence across every
+layer of the stack (kernel -> model oracle -> transformer -> engine), the
+cross-segment tile-skip guarantee, and the padding-path regressions that
+prepacking relies on."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.core.engine import EngineConfig, PrefillOnlyEngine, _bucket
+from repro.kernels import ops, ref
+from repro.kernels.flash_attention import flash_attention as raw_flash
+from repro.models import transformer as tfm
+from repro.models.layers import blocked_attention
+from repro.models.model import build
+from repro.runtime.sharding import materialize
+
+
+def _tol(dtype):
+    return dict(atol=5e-2, rtol=5e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-4, rtol=2e-4)
+
+
+def _segments(lens, S, B=1):
+    """Per-token segment ids for requests of ``lens`` packed into S slots."""
+    seg = np.full((B, S), -1, np.int32)
+    off = 0
+    for n, L in enumerate(lens):
+        seg[:, off:off + L] = n
+        off += L
+    return jnp.asarray(seg)
+
+
+# --------------------------------------------------------------------------
+# kernel layer
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("lens,H,KV,d,window,softcap", [
+    ((40, 30, 26), 4, 4, 16, 0, 0.0),       # MHA
+    ((40, 30, 26), 4, 2, 16, 0, 0.0),       # GQA
+    ((25, 45, 20), 4, 2, 16, 13, 0.0),      # GQA + SWA
+    ((33, 33, 30), 8, 2, 32, 0, 50.0),      # softcap (gemma2)
+    ((7, 80, 9), 2, 1, 8, 5, 30.0),         # everything, skewed lengths
+])
+def test_packed_kernel_matches_ref(lens, H, KV, d, window, softcap, dtype):
+    S = sum(lens)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (2, S, H, d), jnp.float32).astype(dtype)
+    k = jax.random.normal(ks[1], (2, S, KV, d), jnp.float32).astype(dtype)
+    v = jax.random.normal(ks[2], (2, S, KV, d), jnp.float32).astype(dtype)
+    seg = jnp.broadcast_to(_segments(lens, S), (2, S))
+    got = ops.packed_flash_attention(q, k, v, seg, window=window,
+                                     softcap=softcap, block_q=32, block_k=32)
+    want = ref.packed_flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), seg, window=window, softcap=softcap
+    ).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **_tol(dtype))
+
+
+def test_packed_kernel_segments_match_independent_causal():
+    """Each packed segment's rows equal a standalone causal call over it."""
+    lens = (40, 30, 26)
+    S = sum(lens)
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, S, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, S, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, S, 2, 16), jnp.float32)
+    got = ops.packed_flash_attention(q, k, v, _segments(lens, S),
+                                     block_q=32, block_k=32)
+    off = 0
+    for L in lens:
+        solo = ops.flash_attention(q[:, off:off + L], k[:, off:off + L],
+                                   v[:, off:off + L], block_q=32, block_k=32)
+        np.testing.assert_allclose(np.asarray(got[:, off:off + L]),
+                                   np.asarray(solo), atol=2e-4, rtol=2e-4)
+        off += L
+
+
+def test_cross_segment_tiles_are_skipped():
+    """The tile map proves segment-disjoint (q-block, kv-block) tiles never
+    execute — the 0-FLOP structural skip, not just element masking."""
+    lens = (40, 30, 26)          # boundaries at 40 and 70; 32-wide tiles
+    S = sum(lens)
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (1, 4, S, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 2, S, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 2, S, 16), jnp.float32)
+    seg = _segments(lens, S)
+    _, tmap = raw_flash(q, k, v, causal=True, seg_q=seg, seg_k=seg,
+                        block_q=32, block_k=32, debug_tile_map=True)
+    tmap = np.asarray(tmap[0])
+    seg_np = np.asarray(seg[0])
+    nq = nk = S // 32
+    for i in range(nq):
+        for j in range(nk):
+            qs = seg_np[i * 32:(i + 1) * 32]
+            kss = seg_np[j * 32:(j + 1) * 32]
+            causal_live = j * 32 <= i * 32 + 31
+            overlap = (qs.min() <= kss.max()) and (qs.max() >= kss.min())
+            assert tmap[i, j] == int(causal_live and overlap), (i, j, tmap)
+    # the packing must actually skip something beyond the causal triangle:
+    # q-block 2 (segments 1/2) x kv-block 0 (segment 0) is causally live
+    assert tmap[2, 0] == 0
+
+
+def test_noncausal_padded_kv_masked():
+    """Regression: causal=False with a ragged Sk must not attend to the
+    zero-padding the wrapper adds to reach a block multiple."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = jax.random.normal(ks[0], (1, 70, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 70, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 70, 2, 16), jnp.float32)
+    got = ops.flash_attention(q, k, v, causal=False, block_q=32, block_k=32)
+    want = ref.flash_attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+        v.transpose(0, 2, 1, 3), causal=False).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-4, rtol=2e-4)
+
+
+# --------------------------------------------------------------------------
+# model oracle layer
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("window,softcap", [(0, 0.0), (13, 0.0), (0, 50.0)])
+def test_blocked_attention_segments_match_independent(window, softcap):
+    lens = (40, 30, 26)
+    S = sum(lens)
+    ks = jax.random.split(jax.random.PRNGKey(4), 3)
+    q = jax.random.normal(ks[0], (1, S, 4, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, S, 2, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, S, 2, 16), jnp.float32)
+    got = blocked_attention(q, k, v, window=window, softcap=softcap,
+                            seg_ids=_segments(lens, S), q_block=32,
+                            kv_block=32)
+    off = 0
+    for L in lens:
+        solo = blocked_attention(q[:, off:off + L], k[:, off:off + L],
+                                 v[:, off:off + L], window=window,
+                                 softcap=softcap, q_block=32, kv_block=32)
+        np.testing.assert_allclose(np.asarray(got[:, off:off + L]),
+                                   np.asarray(solo), atol=2e-4, rtol=2e-4)
+        off += L
+
+
+# --------------------------------------------------------------------------
+# transformer layer: prefill_packed == N independent prefills
+# --------------------------------------------------------------------------
+
+def _pack(reqs, S):
+    toks = np.zeros((1, S), np.int32)
+    segs = np.full((1, S), -1, np.int32)
+    pos = np.zeros((1, S), np.int32)
+    last = np.zeros((len(reqs),), np.int32)
+    off = 0
+    for n, t in enumerate(reqs):
+        L = len(t)
+        toks[0, off:off + L] = t
+        segs[0, off:off + L] = n
+        pos[0, off:off + L] = np.arange(L)
+        last[n] = off + L - 1
+        off += L
+    return (jnp.asarray(toks), jnp.asarray(segs), jnp.asarray(pos),
+            jnp.asarray(last))
+
+
+@pytest.mark.parametrize("arch,dtype", [
+    ("qwen1.5-0.5b", "float32"),         # GQA
+    ("qwen1.5-0.5b", "bfloat16"),
+    ("gemma2-9b", "float32"),            # local/global SWA + both softcaps
+])
+def test_prefill_packed_matches_independent(arch, dtype):
+    cfg = reduce_config(get_config(arch), hybrid_chunk=0, dtype=dtype,
+                        param_dtype=dtype)
+    api = build(cfg)
+    params = materialize(jax.random.PRNGKey(0), api.defs(), jnp.float32)
+    rng = np.random.default_rng(0)
+    lens = (37, 61, 12, 50)
+    reqs = [rng.integers(0, cfg.vocab_size, n).tolist() for n in lens]
+    S = 192                                  # packed bucket incl. slack
+    toks, segs, pos, last = _pack(reqs, S)
+    logits, kv = tfm.prefill_packed(params, cfg, toks, segs, pos, last,
+                                    kv_keep=S)
+    assert logits.shape == (len(reqs), cfg.vocab_size)
+    off = 0
+    for n, t in enumerate(reqs):
+        want, solo_kv = tfm.prefill(params, cfg,
+                                    {"tokens": jnp.asarray([t], jnp.int32)},
+                                    kv_keep=len(t))
+        got = np.asarray(logits[n], np.float32)
+        ref_l = np.asarray(want[0], np.float32)
+        if dtype == "bfloat16":
+            # bf16 forward: compare constrained-output probabilities (what
+            # the engine consumes) rather than raw logit ULPs
+            ga = np.exp(got - got.max()); ga /= ga.sum()
+            ra = np.exp(ref_l - ref_l.max()); ra /= ra.sum()
+            np.testing.assert_allclose(ga, ra, atol=2e-2)
+        else:
+            np.testing.assert_allclose(got, ref_l, atol=2e-3, rtol=2e-3)
+            # packed KV slices == solo KV (what the prefix cache stores)
+            for key in solo_kv:
+                np.testing.assert_allclose(
+                    np.asarray(kv[key][:, :, off:off + len(t)], np.float32),
+                    np.asarray(solo_kv[key], np.float32),
+                    atol=2e-3, rtol=2e-3)
+        off += len(t)
+
+
+# --------------------------------------------------------------------------
+# engine layer
+# --------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduce_config(get_config("qwen1.5-0.5b"), hybrid_chunk=0)
+    api = build(cfg)
+    params = materialize(jax.random.PRNGKey(0), api.defs(), jnp.float32)
+    return cfg, params
+
+
+def test_bucket_grows_geometrically_past_table():
+    assert _bucket(50, (64, 128)) == 64
+    assert _bucket(128, (64, 128)) == 128
+    assert _bucket(129, (64, 128)) == 256
+    assert _bucket(3000, (64, 128)) == 4096
+
+
+def test_engine_handles_request_longer_than_largest_bucket(setup):
+    cfg, params = setup
+    eng = PrefillOnlyEngine(cfg, params,
+                            EngineConfig(suffix_buckets=(64, 128)))
+    rng = np.random.default_rng(0)
+    toks = rng.integers(0, cfg.vocab_size, 300).tolist()
+    i = eng.submit(toks, allowed_tokens=(5, 9))
+    eng.run_until_drained()
+    assert i in eng.results
+    assert abs(sum(eng.results[i]["scores"].values()) - 1.0) < 1e-6
+
+
+def test_packed_engine_matches_solo_engine(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(1)
+    reqs = [rng.integers(0, cfg.vocab_size, n).tolist()
+            for n in (37, 61, 12, 50, 29)]
+    packed = PrefillOnlyEngine(cfg, params,
+                               EngineConfig(pack_token_budget=256))
+    ids = [packed.submit(t, allowed_tokens=(5, 9)) for t in reqs]
+    done = packed.run_until_drained()
+    assert sorted(done) == sorted(ids)      # one id per served request
+    assert packed.packed_steps >= 1
+    assert packed.packed_requests == len(reqs)
+    solo = PrefillOnlyEngine(cfg, params,
+                             EngineConfig(max_pack_requests=1,
+                                          cache_capacity_tokens=0))
+    ids2 = [solo.submit(t, allowed_tokens=(5, 9)) for t in reqs]
+    solo.run_until_drained()
+    for i, j in zip(ids, ids2):
+        a, b = packed.results[i]["scores"], solo.results[j]["scores"]
+        for t in a:
+            assert abs(a[t] - b[t]) < 2e-2
+
+
+def test_packed_kv_insert_serves_later_cache_hits(setup):
+    cfg, params = setup
+    rng = np.random.default_rng(2)
+    a = rng.integers(0, cfg.vocab_size, 80).tolist()
+    b = rng.integers(0, cfg.vocab_size, 90).tolist()
+    eng = PrefillOnlyEngine(cfg, params, EngineConfig(pack_token_budget=512))
+    eng.submit(a, allowed_tokens=(5, 9))
+    eng.submit(b)
+    eng.run_until_drained()
+    assert eng.packed_steps == 1
+    shared = a + rng.integers(0, cfg.vocab_size, 20).tolist()
+    k = eng.submit(shared, allowed_tokens=(5, 9))
+    eng.run_until_drained()
+    assert eng.results[k]["n_cached"] == 64     # packed KV was inserted
+    cold = PrefillOnlyEngine(cfg, params,
+                             EngineConfig(cache_capacity_tokens=0,
+                                          max_pack_requests=1))
+    j = cold.submit(shared, allowed_tokens=(5, 9))
+    cold.run_until_drained()
+    for t in cold.results[j]["scores"]:
+        assert abs(cold.results[j]["scores"][t]
+                   - eng.results[k]["scores"][t]) < 2e-2
+
+
+def test_batch_formation_respects_budget_and_anchor(setup):
+    cfg, params = setup
+    eng = PrefillOnlyEngine(cfg, params, EngineConfig(
+        pack_token_budget=128, max_pack_requests=4, lam=0.0))
+    eng.jct_model.a, eng.jct_model.b = 1.0, 0.0
+    eng.jct_model.refit_every = 10**9            # freeze for determinism
+    rng = np.random.default_rng(3)
+    short = eng.submit(rng.integers(0, cfg.vocab_size, 30).tolist())
+    long1 = eng.submit(rng.integers(0, cfg.vocab_size, 90).tolist())
+    long2 = eng.submit(rng.integers(0, cfg.vocab_size, 100).tolist())
+    # anchor = short (lowest JCT); backfill fits only one long request
+    anchor = eng.step()
+    assert anchor == short
+    assert eng.packed_requests == 2              # 30 + 90 <= 128, +100 not
+    assert long1 in eng.results and long2 not in eng.results
+    eng.run_until_drained()
+    assert long2 in eng.results
+
+
+def test_packed_suffix_discard_bounds_kv(setup):
+    """kv_keep_tokens bounds the packed path's cache footprint per request
+    (the forward gathers only each segment's keep window), and the kept
+    windows are genuine KV usable by later cache hits."""
+    cfg, params = setup
+    rng = np.random.default_rng(6)
+    a = rng.integers(0, cfg.vocab_size, 80).tolist()
+    b = rng.integers(0, cfg.vocab_size, 90).tolist()
+    eng = PrefillOnlyEngine(cfg, params, EngineConfig(
+        pack_token_budget=512, kv_keep_tokens=32, prefix_bucket_blocks=2))
+    eng.submit(a)
+    eng.submit(b)
+    eng.run_until_drained()
+    assert eng.packed_steps == 1
+    assert eng.cache.used_blocks <= 2 * (32 // eng.ecfg.block_size)
+    shared = a + rng.integers(0, cfg.vocab_size, 20).tolist()
+    k = eng.submit(shared, allowed_tokens=(5, 9))
+    eng.run_until_drained()
+    assert eng.results[k]["n_cached"] == 32
+    cold = PrefillOnlyEngine(cfg, params,
+                             EngineConfig(cache_capacity_tokens=0,
+                                          max_pack_requests=1))
+    j = cold.submit(shared, allowed_tokens=(5, 9))
+    cold.run_until_drained()
+    for t in cold.results[j]["scores"]:
+        assert abs(cold.results[j]["scores"][t]
+                   - eng.results[k]["scores"][t]) < 2e-2
+
+
+def test_prefix_sharers_are_not_copacked(setup):
+    """Requests sharing a prefix root run sequentially (KV reuse beats the
+    packing win), so the later one still hits the earlier one's cache."""
+    cfg, params = setup
+    rng = np.random.default_rng(5)
+    profile = rng.integers(0, cfg.vocab_size, 80).tolist()
+    eng = PrefillOnlyEngine(cfg, params, EngineConfig(pack_token_budget=512))
+    a = eng.submit(profile + rng.integers(0, cfg.vocab_size, 20).tolist())
+    b = eng.submit(profile + rng.integers(0, cfg.vocab_size, 20).tolist())
+    eng.run_until_drained()
+    assert eng.packed_steps == 0
+    assert eng.results[b]["n_cached"] > 0
+
+
+def test_jct_observes_packed_steps(setup):
+    cfg, params = setup
+    eng = PrefillOnlyEngine(cfg, params, EngineConfig(
+        pack_token_budget=256, cache_capacity_tokens=0))
+    eng.jct_model.refit_every = 2
+    rng = np.random.default_rng(4)
+    for rep in range(2):
+        for n in (20, 25, 30, 35, 40, 45):
+            eng.submit(rng.integers(0, cfg.vocab_size, n).tolist())
+        eng.run_until_drained()
+        if rep == 0:
+            # every first-pass step compiled a fresh shape: those wall times
+            # are jit-compile cost, not serving cost, and must NOT calibrate
+            assert len(eng.jct_model._recent) == 0
+    assert len(eng.jct_model._recent) >= 1       # warm packed samples only
+    assert eng.jct_model.a > 0
