@@ -1,10 +1,33 @@
-"""Fig 6 + Fig 7: QPS vs mean / P99 latency, 5 engines x 2 workloads.
+"""Fig 6 + Fig 7: QPS vs mean / P99 latency — simulator AND real async serving.
 
-Paper methodology (§7.2): find PrefillOnly's saturation throughput x by
-pouring in all requests at once, then evaluate QPS in {x/4, x/2, x, 2x, 3x,
-4x}. TPU v5e instances, fp8 weights (the paper's quantized middle-end setup).
+``run(emit)`` (benchmarks.run entry) keeps the paper methodology (§7.2) on
+the discrete-event simulator: find PrefillOnly's saturation throughput x by
+pouring in all requests at once, then evaluate QPS in {x/4 .. 4x} for the 5
+engine baselines.
+
+``run_async(emit)`` (also ``python -m benchmarks.qps_latency --mode async``)
+drives REAL reduced-config engines through the serving subsystem
+(``repro.serving.AsyncServer``) on the post_recommendation trace:
+
+  1. router comparison at saturation load: user-hash rendezvous routing vs
+     JCT-aware least-backlog routing (2 instances, no admission control);
+  2. overload behavior at 2x saturation: per-request deadlines + admission/
+     shed vs no admission — the shed path keeps SERVED p99 bounded near the
+     deadline while the no-admission baseline's p99 grows with the backlog
+     (the longer the trace, the worse — there is no steady state past
+     saturation).
+
+One engine pool is built once and reused across runs (jit compiles and the
+profile-fitted JCT model stay warm — they are host properties, not policy
+properties); prefix caches and telemetry reset between runs so every policy
+starts cold on cache state. Output is written to
+``benchmarks/results/qps_latency_async.txt``.
 """
 from __future__ import annotations
+
+import argparse
+import time
+from typing import Dict, Optional
 
 from repro.configs import get_config
 from repro.core.simulator import Simulator, paper_engines
@@ -12,6 +35,14 @@ from repro.data.workloads import get_trace
 
 ARCH = "llama3.1-8b"
 CHIPS = 2
+
+# ---- real async-serving comparison ----------------------------------------
+ASYNC_ARCH = "qwen1.5-0.5b"
+ASYNC_TRACE = "post_recommendation"
+ASYNC_INSTANCES = 2
+ASYNC_REQUESTS = 120
+ASYNC_SCALE = 0.02
+ASYNC_CACHE_TOKENS = 16384
 
 
 def saturation_qps(trace_name: str) -> float:
@@ -45,3 +76,166 @@ def run(emit):
                 out.append((trace_name, mult, spec.name, r))
     # headline check: PrefillOnly sustains the highest load
     return out
+
+
+def _reset_pool(pool) -> None:
+    """Cold caches/telemetry, warm compiles + JCT fit."""
+    from repro.core.prefix_cache import PrefixCache
+    for eng in pool.engines.values():
+        with eng.lock:
+            eng.queue.clear()
+            eng.results.clear()
+            eng.cache = PrefixCache(
+                eng.ecfg.cache_capacity_tokens // eng.ecfg.block_size,
+                eng.ecfg.block_size)
+            eng.steps = eng.hit_tokens = eng.total_tokens = 0
+            eng.packed_steps = eng.packed_requests = eng.padded_slots = 0
+
+
+def _async_round(pool, qps: float, *, router: str, deadline: Optional[float],
+                 admission: bool, max_requests: int = ASYNC_REQUESTS,
+                 trace: str = ASYNC_TRACE, trace_kw: Optional[Dict] = None,
+                 scale: float = ASYNC_SCALE) -> Dict:
+    from repro.launch.serve import serve_trace
+    _reset_pool(pool)
+    return serve_trace(ASYNC_ARCH, trace, qps=qps,
+                       scale_tokens=scale, max_requests=max_requests,
+                       router=router, deadline=deadline, admission=admission,
+                       pool=pool, trace_kw=trace_kw)
+
+
+def run_async(emit):
+    from repro.launch.serve import make_pool
+    lines = []
+
+    def note(name, us, derived=""):
+        lines.append(emit(name, us, derived))
+
+    pool = make_pool(ASYNC_ARCH, ASYNC_INSTANCES, profile=True,
+                     profile_lengths=(64, 128, 256, 512),
+                     cache_tokens=ASYNC_CACHE_TOKENS)
+    any_eng = next(iter(pool.engines.values()))
+    note("qps_latency_async/jct_fit", any_eng.jct_model.b * 1e6,
+         f"a={any_eng.jct_model.a:.2e}s/tok "
+         f"pack_budget={any_eng.ecfg.pack_token_budget} "
+         f"max_pack={any_eng.ecfg.max_pack_requests}")
+
+    # warm every hot jit shape + first saturation estimate: all-at-once.
+    # That estimate is cold-cache pessimistic, so refine it with spread-
+    # arrival probes: raise the offered rate until served throughput stops
+    # following it (a queue formed — the plateau IS the capacity).
+    t0 = time.time()
+    warm = _async_round(pool, 10_000.0, router="least_backlog",
+                        deadline=None, admission=False)
+    sat = warm["served"] / warm["wall_seconds"]
+    note("qps_latency_async/warmup", warm["wall_seconds"] * 1e6,
+         f"all_at_once={sat:.3f}rps warm={time.time() - t0:.0f}s "
+         f"hit={warm['token_hit_rate']:.2f}")
+    for _ in range(3):
+        offered = 1.8 * sat
+        r = _async_round(pool, offered, router="least_backlog",
+                         deadline=None, admission=False)
+        note("qps_latency_async/probe", r["mean_latency"] * 1e6,
+             f"offered={offered:.3f}rps thr={r['throughput_rps']:.3f}rps "
+             f"p99={r['p99_latency']:.2f}s")
+        sat = max(sat, r["throughput_rps"])
+        if r["throughput_rps"] < 0.85 * offered:
+            break
+    note("qps_latency_async/saturation", 0.0, f"x={sat:.3f}rps")
+    # prewarm the user_hash routing pattern too: each (suffix, prefix-len)
+    # pair a placement produces compiles its own jit program, and a compile
+    # landing inside a measured round would read as a fake latency tail
+    _async_round(pool, 10_000.0, router="user_hash", deadline=None,
+                 admission=False)
+
+    # (1) router comparison at saturation load (2 instances, no admission);
+    # median of 3 rounds per router — single rounds on this shared CPU box
+    # swing with machine noise
+    routers = {}
+    for router in ("user_hash", "least_backlog"):
+        rounds = [_async_round(pool, sat, router=router, deadline=None,
+                               admission=False) for _ in range(3)]
+        r = sorted(rounds, key=lambda x: x["p99_latency"])[1]
+        r["throughput_rps"] = sorted(x["throughput_rps"]
+                                     for x in rounds)[1]
+        routers[router] = r
+        note(f"qps_latency_async/router/{router}/q1.0x",
+             r["mean_latency"] * 1e6,
+             f"thr={r['throughput_rps']:.3f}rps "
+             f"p50={r['p50_latency']:.2f}s p99={r['p99_latency']:.2f}s "
+             f"hit={r['token_hit_rate']:.2f} (median of 3)")
+    uh, lb = routers["user_hash"], routers["least_backlog"]
+    note("qps_latency_async/router/verdict", 0.0,
+         f"least_backlog thr {lb['throughput_rps'] / uh['throughput_rps']:.2f}x "
+         f"p99 {lb['p99_latency'] / uh['p99_latency']:.2f}x of user_hash")
+
+    # (2) overload: 2x saturation, deadline-shed vs no admission, at TWO
+    # trace lengths. The workload is credit_verification — no prefix
+    # sharing, so instance capacity is flat and "2x saturation" stays 2x
+    # for the whole run (post_recommendation's capacity climbs as profile
+    # caches warm, which dissolves the overload). Past saturation there is
+    # no steady state: the no-admission p99 scales with how long the
+    # overload lasts, while the shed path's served p99 stays pinned near
+    # the deadline at any length.
+    # scale 0.01 keeps credit requests (400-600 tokens) out of the
+    # quadratic-attention regime that dominates 2048-token buckets on CPU
+    over_kw = dict(trace="credit_verification", scale=0.01)
+    # warm the credit-trace jit shapes, then measure its flat capacity
+    _async_round(pool, 10_000.0, router="least_backlog", deadline=None,
+                 admission=False, trace_kw={"num_users": 40}, **over_kw)
+    cap_r = _async_round(pool, 10_000.0, router="least_backlog",
+                         deadline=None, admission=False,
+                         trace_kw={"num_users": 40}, **over_kw)
+    cap = cap_r["throughput_rps"]
+    # a few mean service times (2 instances => mean service = 2/cap):
+    # binds under 2x overload, loose for on-time requests
+    deadline = max(8.0 / cap, 1.0)
+    note("qps_latency_async/overload2x/capacity", 0.0,
+         f"credit_verification cap={cap:.3f}rps deadline={deadline:.2f}s")
+    over = {}
+    for n_req in (60, 180):
+        for mode, dl, adm in (("shed", deadline, True),
+                              ("no_admission", None, False)):
+            r = _async_round(pool, 2.0 * cap, router="least_backlog",
+                             deadline=dl, admission=adm,
+                             max_requests=n_req,
+                             trace_kw={"num_users": n_req}, **over_kw)
+            over[(mode, n_req)] = r
+            note(f"qps_latency_async/overload2x/{mode}/n{n_req}",
+                 r["mean_latency"] * 1e6,
+                 f"served={r['served']}/{r['requests']} "
+                 f"thr={r['throughput_rps']:.3f}rps "
+                 f"p50={r['p50_latency']:.2f}s p99={r['p99_latency']:.2f}s "
+                 f"rej={r['reject_reasons']}")
+    n1, n2 = 60, 180
+    note("qps_latency_async/overload2x/verdict", 0.0,
+         f"deadline={deadline:.2f}s "
+         f"shed_p99={over[('shed', n1)]['p99_latency']:.2f}s"
+         f"->{over[('shed', n2)]['p99_latency']:.2f}s (bounded) "
+         f"no_admission_p99={over[('no_admission', n1)]['p99_latency']:.2f}s"
+         f"->{over[('no_admission', n2)]['p99_latency']:.2f}s "
+         f"(grows with trace length)")
+    return lines, over, routers
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mode", default="async", choices=["async", "sim"])
+    ap.add_argument("--out", default="benchmarks/results/qps_latency_async.txt")
+    args = ap.parse_args()
+    from benchmarks.common import emit
+    if args.mode == "sim":
+        run(emit)
+        return
+    lines, _, _ = run_async(emit)
+    if args.out:
+        import os
+        os.makedirs(os.path.dirname(args.out), exist_ok=True)
+        with open(args.out, "w") as f:
+            f.write("name,us_per_call,derived\n")
+            f.write("\n".join(lines) + "\n")
+        print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,6 +1,7 @@
-"""END-TO-END DRIVER: serve the paper's post-recommendation trace with
-batched request arrival through a pool of PrefillOnly instances (real
-forwards, real prefix-KV reuse, Algorithm-1 scheduling, user-id routing).
+"""END-TO-END DRIVER: serve the paper's post-recommendation trace through
+the async serving subsystem — a pool of PrefillOnly instances behind an
+AsyncServer (real forwards, real prefix-KV reuse, Algorithm-1 scheduling,
+JCT-aware routing, open-loop real-time arrivals).
 
     PYTHONPATH=src python examples/serve_trace.py [--qps 20] [--requests 40]
 """
@@ -15,10 +16,13 @@ def main():
     ap.add_argument("--requests", type=int, default=40)
     ap.add_argument("--instances", type=int, default=2)
     ap.add_argument("--policy", default="srjf_calibrated")
+    ap.add_argument("--router", default="least_backlog",
+                    choices=["user_hash", "least_backlog"])
     args = ap.parse_args()
 
     out = serve_trace("qwen1.5-0.5b", "post_recommendation", qps=args.qps,
                       n_instances=args.instances, policy=args.policy,
+                      router=args.router,
                       scale_tokens=0.02, max_requests=args.requests)
     print("\n=== serve_trace results ===")
     for k, v in out.items():
@@ -26,6 +30,9 @@ def main():
             for name, st in v.items():
                 print(f"  {name}: hit_rate={st['hit_rate']:.2f} "
                       f"steps={st['steps']}")
+        elif k == "metrics":
+            print("--- telemetry ---")
+            print(v)
         else:
             print(f"{k}: {v}")
 

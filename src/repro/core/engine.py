@@ -38,6 +38,7 @@ so SRJF-calibrated scoring stays calibrated for packed steps.
 from __future__ import annotations
 
 import dataclasses
+import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -77,16 +78,27 @@ class EngineConfig:
     pack_token_budget: int = 2048      # prepacking: max packed tokens/step
     max_pack_requests: int = 16        # prepacking: max segments per step
                                        # (<=1 disables batch formation)
+    autotune_pack: bool = True         # retune both from the profile() fit
+    pack_inflation: float = 2.0        # max anchor-step slowdown autotune
+                                       # accepts vs a typical solo step
 
 
 class PrefillOnlyEngine:
     """Single-instance engine over a dense-family model (real arrays)."""
 
-    def __init__(self, cfg: ModelConfig, params, ecfg: EngineConfig = EngineConfig()):
+    def __init__(self, cfg: ModelConfig, params,
+                 ecfg: Optional[EngineConfig] = None):
         assert cfg.family in ("dense", "vlm", "audio", "moe"), cfg.family
         self.cfg = cfg
         self.params = cast_params(params, cfg.dtype)
-        self.ecfg = ecfg
+        # per-engine config: a shared default instance would alias mutable
+        # state (autotune) across every engine in a pool
+        self.ecfg = ecfg = EngineConfig() if ecfg is None else ecfg
+        # Guards queue / cache / results / jct_model. The engine is driven by
+        # ONE worker thread (step) while router/server threads concurrently
+        # submit, cancel, shed, and probe backlog — the forward itself runs
+        # outside the lock so probes never wait on compute.
+        self.lock = threading.RLock()
         self.cache = PrefixCache(ecfg.cache_capacity_tokens // ecfg.block_size,
                                  ecfg.block_size)
         self.jct_model = LinearProxyJCT()
@@ -98,6 +110,10 @@ class PrefillOnlyEngine:
         self._packed_fns: Dict[Tuple[int, int], callable] = {}
         self._last_step_ids: List[int] = []    # all requests served by the
                                                # most recent step()
+        self._inflight: List[int] = []         # popped by step(), not yet in
+                                               # results (crash accounting)
+        self._inflight_pred = 0.0              # predicted cost of that batch
+        self._inflight_t0 = 0.0                # and when it started
         self.steps = 0
         self.hit_tokens = 0
         self.total_tokens = 0
@@ -120,20 +136,121 @@ class PrefillOnlyEngine:
                 jax.block_until_ready(logits)
                 samples.append((n, 0, time.perf_counter() - t0))
         self.jct_model.fit(samples)
+        if self.ecfg.autotune_pack:
+            self.autotune_packing(ref_len=max(lengths))
         return self.jct_model.pearson_r
+
+    def autotune_packing(self, ref_len: int) -> Tuple[int, int]:
+        """Tune ``pack_token_budget`` / ``max_pack_requests`` from the fitted
+        JCT curve instead of fixed defaults (ROADMAP follow-up).
+
+        Packing trades anchor latency for throughput: a packed step costs
+        jct(total tokens) instead of jct(anchor tokens). Accept that trade up
+        to ``pack_inflation``x the cost of a typical solo step (a ``ref_len``
+        request — the largest profiled length): with jct = a*S + b the budget
+        solves a*S + b <= inflation * (a*ref + b), so hosts with a large
+        fixed overhead b relative to per-token cost a (where amortizing b is
+        the whole win) get a proportionally larger budget. The request cap
+        follows as budget / smallest-bucket, i.e. the most segments a full
+        budget could plausibly hold.
+        """
+        m, ecfg = self.jct_model, self.ecfg
+        if m.a <= 0:
+            return ecfg.pack_token_budget, ecfg.max_pack_requests
+        max_step = ecfg.pack_inflation * m.predict(ref_len)
+        floor = _bucket(ref_len, ecfg.suffix_buckets)
+        budget = max([floor] + [s for s in ecfg.suffix_buckets
+                                if m.predict(s) <= max_step])
+        n_max = int(np.clip(budget // max(1, ecfg.suffix_buckets[0]), 1, 64))
+        self.ecfg = dataclasses.replace(ecfg, pack_token_budget=budget,
+                                        max_pack_requests=n_max)
+        return budget, n_max
 
     # ---- request lifecycle ---------------------------------------------------
     def submit(self, tokens: Sequence[int],
                allowed_tokens: Optional[Sequence[int]] = None,
-               user_id: Optional[str] = None, now: Optional[float] = None) -> int:
+               user_id: Optional[str] = None, now: Optional[float] = None,
+               deadline: Optional[float] = None,
+               chain: Optional[Tuple[int, ...]] = None) -> int:
         now = time.perf_counter() if now is None else now
         r = Request(n_input=len(tokens), arrival=now,
-                    chain=token_chain(tokens, self.ecfg.block_size),
+                    chain=(token_chain(tokens, self.ecfg.block_size)
+                           if chain is None else chain),
                     tokens=list(tokens), user_id=user_id,
-                    allowed_tokens=tuple(allowed_tokens) if allowed_tokens else None)
-        r.n_cached_at_arrival = self.cache.match_len(r.chain)
-        self.queue.append(r)
+                    allowed_tokens=tuple(allowed_tokens) if allowed_tokens else None,
+                    deadline=deadline)
+        with self.lock:
+            r.n_cached_at_arrival = self.cache.match_len(r.chain)
+            self.queue.append(r)
         return r.req_id
+
+    def cancel(self, req_id: int) -> Optional[Request]:
+        """Remove a QUEUED request (no effect once executing). Returns the
+        removed request, or None if it was not waiting here."""
+        with self.lock:
+            for i, r in enumerate(self.queue):
+                if r.req_id == req_id:
+                    return self.queue.pop(i)
+        return None
+
+    def shed_expired(self, now: Optional[float] = None) -> List[Request]:
+        """Pop queued requests that cannot meet their deadline anymore:
+        even starting RIGHT NOW, now + predicted JCT > deadline. Shedding
+        them early converts a guaranteed tail-latency blowup into a cheap
+        typed rejection (admission control's in-queue half)."""
+        now = time.perf_counter() if now is None else now
+        shed: List[Request] = []
+        with self.lock:
+            keep = []
+            for r in self.queue:
+                if r.deadline is not None and (
+                        now + self.jct_model.predict(
+                            r.n_input, self.cache.match_len(r.chain))
+                        > r.deadline):
+                    shed.append(r)
+                else:
+                    keep.append(r)
+            if shed:
+                self.queue[:] = keep
+        return shed
+
+    def pending_jct(self, now: Optional[float] = None) -> float:
+        """Predicted seconds of queued work PLUS the predicted remainder of
+        the batch executing right now — the backlog signal JCT-aware routing
+        ranks instances by. Only meaningful because prefill-only JCT is
+        precisely predictable.
+
+        Queued requests are scored against their ARRIVAL-time cache match
+        (already computed by submit), not re-walked against the live cache:
+        the router calls this for every instance on every arrival, and an
+        O(queue x chain) walk under the engine lock would contend with the
+        worker exactly when routing matters most. The estimate only errs
+        conservative (the cache can have warmed since arrival, never
+        cooled for a queued request's own prefix)."""
+        now = time.perf_counter() if now is None else now
+        with self.lock:
+            queued = sum(self.jct_model.predict(r.n_input,
+                                                r.n_cached_at_arrival)
+                         for r in self.queue)
+            running = 0.0
+            if self._inflight:
+                running = max(0.0, self._inflight_pred
+                              - (now - self._inflight_t0))
+            return queued + running
+
+    def predict_jct(self, n_input: int, chain: Tuple[int, ...] = ()) -> float:
+        """Predicted JCT of a PROSPECTIVE request given this instance's
+        cache state (router's per-instance cost probe)."""
+        with self.lock:
+            return self.jct_model.predict(n_input, self.cache.match_len(chain))
+
+    def cached_prefix_len(self, chain: Tuple[int, ...]) -> int:
+        with self.lock:
+            return self.cache.match_len(chain)
+
+    @property
+    def last_step_ids(self) -> List[int]:
+        return list(self._last_step_ids)
 
     def step(self) -> Optional[int]:
         """One scheduling step: pick (Algorithm 1), form a packed batch,
@@ -144,6 +261,13 @@ class PrefillOnlyEngine:
             return None
         for r in batch:
             r.start_time = now
+        with self.lock:
+            self._inflight = [r.req_id for r in batch]
+            self._inflight_pred = sum(
+                self.jct_model.predict(r.n_input,
+                                       self.cache.match_len(r.chain))
+                for r in batch)
+            self._inflight_t0 = now
         self._step_compiled = False
         if len(batch) == 1:
             r = batch[0]
@@ -152,29 +276,34 @@ class PrefillOnlyEngine:
             # observes launch latency instead of compute time
             jax.block_until_ready(logits)
             r.finish_time = time.perf_counter()
-            self.results[r.req_id] = self._score(logits, r)
-            # steps that compiled a fresh shape are NOT JCT samples — a
-            # multi-second jit compile recorded as serving cost wrecks the
-            # refit (profile() excludes compiles the same way via warm-up)
-            if not self._step_compiled:
-                self.jct_model.observe(r.n_input, r.n_cached_at_start,
-                                       r.finish_time - now)
+            with self.lock:
+                self.results[r.req_id] = self._score(logits, r)
+                # steps that compiled a fresh shape are NOT JCT samples — a
+                # multi-second jit compile recorded as serving cost wrecks the
+                # refit (profile() excludes compiles the same way via warm-up)
+                if not self._step_compiled:
+                    self.jct_model.observe(r.n_input, r.n_cached_at_start,
+                                           r.finish_time - now)
         else:
             logits = self._execute_packed(batch)
             jax.block_until_ready(logits)
             done = time.perf_counter()
-            for n, r in enumerate(batch):
-                r.finish_time = done
-                self.results[r.req_id] = self._score(logits[n:n + 1], r)
-            # packed cost is a function of TOTAL packed tokens: report it on
-            # the same miss-token axis Algorithm 1 scores with
-            if not self._step_compiled:
-                self.jct_model.observe(sum(r.n_input for r in batch), 0,
-                                       done - now)
+            with self.lock:
+                for n, r in enumerate(batch):
+                    r.finish_time = done
+                    self.results[r.req_id] = self._score(logits[n:n + 1], r)
+                # packed cost is a function of TOTAL packed tokens: report it
+                # on the same miss-token axis Algorithm 1 scores with
+                if not self._step_compiled:
+                    self.jct_model.observe(sum(r.n_input for r in batch), 0,
+                                           done - now)
             self.packed_steps += 1
             self.packed_requests += len(batch)
         self.steps += 1
         self._last_step_ids = [r.req_id for r in batch]
+        with self.lock:
+            self._inflight = []
+            self._inflight_pred = 0.0
         return batch[0].req_id
 
     # ---- batch formation (prepacking) ---------------------------------------
@@ -204,39 +333,40 @@ class PrefillOnlyEngine:
         lets the later ones hit the earlier one's cached KV, which beats the
         packing win (BatchLLM's global-prefix observation).
         """
-        i = self.scheduler.pick(self.queue, self.cache, now)
-        if i is None:
-            return None
-        anchor = self.queue.pop(i)
-        batch = [anchor]
-        ecfg = self.ecfg
-        if (ecfg.max_pack_requests <= 1 or ecfg.pack_token_budget <= 0
-                or not self.queue or self._usable_prefix(anchor) > 0):
+        with self.lock:
+            i = self.scheduler.pick(self.queue, self.cache, now)
+            if i is None:
+                return None
+            anchor = self.queue.pop(i)
+            batch = [anchor]
+            ecfg = self.ecfg
+            if (ecfg.max_pack_requests <= 1 or ecfg.pack_token_budget <= 0
+                    or not self.queue or self._usable_prefix(anchor) > 0):
+                return batch
+            total = anchor.n_input
+            roots = {anchor.chain[0]} if anchor.chain else set()
+            cands = sorted(self.queue, key=lambda r: (-r.n_input, r.arrival,
+                                                      r.req_id))
+            for r in cands:
+                if len(batch) >= ecfg.max_pack_requests:
+                    break
+                if total + r.n_input > ecfg.pack_token_budget:
+                    continue
+                root = r.chain[0] if r.chain else None
+                if root is not None and root in roots:
+                    continue
+                # cache walk LAST and only for requests that actually fit —
+                # pick() already probed the whole queue this step; don't
+                # re-walk every chain a second time for the candidate list
+                if self._usable_prefix(r) > 0:
+                    continue
+                batch.append(r)
+                total += r.n_input
+                if root is not None:
+                    roots.add(root)
+            for r in batch[1:]:
+                self.queue.remove(r)
             return batch
-        total = anchor.n_input
-        roots = {anchor.chain[0]} if anchor.chain else set()
-        cands = sorted(self.queue, key=lambda r: (-r.n_input, r.arrival,
-                                                  r.req_id))
-        for r in cands:
-            if len(batch) >= ecfg.max_pack_requests:
-                break
-            if total + r.n_input > ecfg.pack_token_budget:
-                continue
-            root = r.chain[0] if r.chain else None
-            if root is not None and root in roots:
-                continue
-            # cache walk LAST and only for requests that actually fit —
-            # pick() already probed the whole queue this step; don't re-walk
-            # every chain a second time just to build the candidate list
-            if self._usable_prefix(r) > 0:
-                continue
-            batch.append(r)
-            total += r.n_input
-            if root is not None:
-                roots.add(root)
-        for r in batch[1:]:
-            self.queue.remove(r)
-        return batch
 
     def run_until_drained(self) -> List[int]:
         """Serve until the queue is empty; returns one id per served request
@@ -251,43 +381,52 @@ class PrefillOnlyEngine:
     # ---- execution -----------------------------------------------------------
     def _execute(self, r: Request) -> jax.Array:
         bs = self.ecfg.block_size
-        prefix_len = self._usable_prefix(r, touch=True)
-        use_blocks = prefix_len // bs
-        r.n_cached_at_start = prefix_len
-        self.hit_tokens += prefix_len
-        self.total_tokens += r.n_input
-        self.padded_slots += prefix_len + _bucket(r.n_input - prefix_len,
-                                                  self.ecfg.suffix_buckets)
-
-        keep = min(r.n_input, self.ecfg.kv_keep_tokens)
+        # cache probe + pin under the lock; the forward itself runs outside
+        # it so router/admission probes never block on compute
+        with self.lock:
+            prefix_len = self._usable_prefix(r, touch=True)
+            use_blocks = prefix_len // bs
+            r.n_cached_at_start = prefix_len
+            self.hit_tokens += prefix_len
+            self.total_tokens += r.n_input
+            self.padded_slots += prefix_len + _bucket(
+                r.n_input - prefix_len, self.ecfg.suffix_buckets)
+            keep = min(r.n_input, self.ecfg.kv_keep_tokens)
+            if prefix_len:
+                self.cache.pin(r.chain, use_blocks)
+                payloads = self.cache.match_payloads(r.chain)[:use_blocks]
+                pk = jnp.concatenate([p[0] for p in payloads], axis=2)
+                pv = jnp.concatenate([p[1] for p in payloads], axis=2)
         if prefix_len == 0:
             logits, new_kv, n_new = self._run_fresh(r.tokens, keep)
             kv_from = 0
         else:
-            self.cache.pin(r.chain, use_blocks)
-            payloads = self.cache.match_payloads(r.chain)[:use_blocks]
-            pk = jnp.concatenate([p[0] for p in payloads], axis=2)
-            pv = jnp.concatenate([p[1] for p in payloads], axis=2)
             logits, new_kv, n_new = self._run_suffix(
                 r.tokens[prefix_len:], pk, pv, prefix_len, keep)
-            self.cache.unpin(r.chain, use_blocks)
             kv_from = prefix_len
         # split fresh KV into block payloads and insert (suffix discard:
         # only up to ``keep`` tokens total)
-        n_insertable = max(0, min(keep, kv_from + n_new) - kv_from)
-        n_blocks_new = n_insertable // bs
-        payloads_all = self.cache.match_payloads(r.chain)[:use_blocks]
-        for b in range(n_blocks_new):
-            k_b = new_kv["k"][:, :, b * bs:(b + 1) * bs]
-            v_b = new_kv["v"][:, :, b * bs:(b + 1) * bs]
-            payloads_all.append((k_b, v_b))
-        self.cache.insert(r.chain, kv_from + n_blocks_new * bs,
-                          now=time.perf_counter(), payloads=payloads_all)
+        with self.lock:
+            if prefix_len:
+                self.cache.unpin(r.chain, use_blocks)
+            n_insertable = max(0, min(keep, kv_from + n_new) - kv_from)
+            n_blocks_new = n_insertable // bs
+            payloads_all = self.cache.match_payloads(r.chain)[:use_blocks]
+            for b in range(n_blocks_new):
+                k_b = new_kv["k"][:, :, b * bs:(b + 1) * bs]
+                v_b = new_kv["v"][:, :, b * bs:(b + 1) * bs]
+                payloads_all.append((k_b, v_b))
+            self.cache.insert(r.chain, kv_from + n_blocks_new * bs,
+                              now=time.perf_counter(), payloads=payloads_all)
         return logits
 
     def _run_fresh(self, tokens: Sequence[int], keep: int = 0):
         S = _bucket(len(tokens), self.ecfg.suffix_buckets)
-        keep_pad = min(keep, S)
+        # bucket the keep budget too: kv_keep only bounds how much KV leaves
+        # each layer (keeping more is safe, callers slice), and a raw
+        # per-request value would put every distinct length in its own jit key
+        keep_pad = min(_bucket(keep, self.ecfg.suffix_buckets) if keep else 0,
+                       S)
         key = (S, keep_pad)
         if key not in self._fresh_fns:
             self._step_compiled = True
@@ -306,8 +445,9 @@ class PrefillOnlyEngine:
             jnp.asarray([len(tokens) - 1], jnp.int32))
         if kv is None:
             return logits, {"k": None, "v": None}, 0
-        # kv: (L, 1, keep_pad, KV, hd); valid fresh tokens = len(tokens)
-        n_new = min(keep_pad, len(tokens))
+        # kv: (L, 1, keep_pad, KV, hd); valid fresh tokens = len(tokens),
+        # usable budget = the caller's keep (keep_pad only pads the jit key)
+        n_new = min(keep, keep_pad, len(tokens))
         return logits, kv, n_new
 
     def _execute_packed(self, batch: List[Request]) -> jax.Array:
@@ -371,22 +511,26 @@ class PrefillOnlyEngine:
         if kv is not None:
             now = time.perf_counter()
             cum = 0
-            for n, r in enumerate(batch):
-                payloads = []
-                for b in range(keeps[n] // bs):
-                    lo = cum + b * bs
-                    payloads.append((kv["k"][:, :, lo:lo + bs],
-                                     kv["v"][:, :, lo:lo + bs]))
-                self.cache.insert(r.chain, keeps[n], now=now,
-                                  payloads=payloads)
-                cum += keeps[n]
+            with self.lock:
+                for n, r in enumerate(batch):
+                    payloads = []
+                    for b in range(keeps[n] // bs):
+                        lo = cum + b * bs
+                        payloads.append((kv["k"][:, :, lo:lo + bs],
+                                         kv["v"][:, :, lo:lo + bs]))
+                    self.cache.insert(r.chain, keeps[n], now=now,
+                                      payloads=payloads)
+                    cum += keeps[n]
         return logits
 
     def _run_suffix(self, tokens, pk, pv, prefix_len: int, keep: int):
         S = _bucket(len(tokens), self.ecfg.suffix_buckets)
         P = pk.shape[2]
         keep_new = max(0, min(keep, prefix_len + S) - prefix_len)
-        key = (S, P, keep_new)
+        # bucket the fresh-KV budget in the jit key (see _run_fresh)
+        keep_pad = min(_bucket(keep_new, self.ecfg.suffix_buckets)
+                       if keep_new else 0, S)
+        key = (S, P, keep_pad)
         if key not in self._suffix_fns:
             self._step_compiled = True
             cfg = self.cfg
@@ -395,7 +539,7 @@ class PrefillOnlyEngine:
             def fn(params, toks, pk, pv, last_index):
                 return tfm.prefill_with_prefix(
                     params, cfg, {"tokens": toks}, {"k": pk, "v": pv},
-                    prefix_len=P, kv_keep=P + keep_new, last_index=last_index)
+                    prefix_len=P, kv_keep=P + keep_pad, last_index=last_index)
 
             self._suffix_fns[key] = fn
         toks = np.zeros((1, S), np.int32)

@@ -36,6 +36,7 @@ class Request:
     req_id: int = dataclasses.field(default_factory=lambda: next(_req_counter))
     user_id: Optional[str] = None
     allowed_tokens: Optional[Tuple[int, ...]] = None   # e.g. (yes_id, no_id)
+    deadline: Optional[float] = None       # absolute; None = best-effort
     # bookkeeping filled by the engine/simulator:
     n_cached_at_arrival: int = 0
     start_time: float = -1.0

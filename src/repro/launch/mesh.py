@@ -8,17 +8,30 @@ from __future__ import annotations
 import jax
 
 
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` across jax versions.
+
+    Newer jax exposes ``jax.sharding.AxisType`` and expects explicit
+    ``axis_types``; on older releases the attribute does not exist and
+    ``make_mesh`` defaults every axis to Auto anyway. Tests and launch code
+    build meshes through this helper so version drift stays localized here.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod (data, model); 2 pods => (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model_axis: int = 1):
     """Degenerate 1x1 (or 1xN) mesh for CPU smoke/integration tests."""
     n = jax.device_count()
     data = max(1, n // model_axis)
-    return jax.make_mesh((data, model_axis), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh((data, model_axis), ("data", "model"))

@@ -1,9 +1,18 @@
-"""Serving driver: PrefillOnly instance pool + user-id routing + trace replay.
+"""Serving driver: async PrefillOnly instance pool + trace replay.
 
-This is the paper's deployment shape (§7.1 "Routing"): N single-model-copy
-engine instances, requests routed by user id (rendezvous hashing here, which
-additionally gives the elastic minimal-remap property), each instance running
-Algorithm-1 scheduling with continuous JCT calibration and suffix-KV discard.
+The paper's deployment shape (§7.1): N single-model-copy engine instances
+behind a router, each running Algorithm-1 scheduling with continuous JCT
+calibration and suffix-KV discard. Since PR 2 the driver is ASYNC: an
+``AsyncServer`` runs one worker thread per engine, the submitting thread
+replays the trace open-loop in real time (sleep to each arrival, submit,
+move on — no polling step loop), and every request resolves through a
+``Future`` to either a scored result or a typed ``Rejected``.
+
+Routing is pluggable (``--router user_hash`` is the paper's rendezvous user
+hash; ``--router least_backlog`` routes on predicted-JCT backlog with
+cache-affinity tie-break — exploiting the JCT predictability that is the
+paper's whole point). Admission control (MIL + deadline feasibility) and
+in-queue deadline shedding are on by default when ``--deadline`` is given.
 
 On this CPU box the instances run reduced configs with REAL forwards; on TPU
 each instance is one mesh tile (see DESIGN.md §5 instance sizing).
@@ -12,7 +21,7 @@ from __future__ import annotations
 
 import argparse
 import time
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,11 +34,22 @@ from repro.data.workloads import get_trace
 from repro.models.model import build
 from repro.runtime.fault_tolerance import InstancePool
 from repro.runtime.sharding import materialize
+from repro.serving import (AdmissionController, AsyncServer, Rejected,
+                           get_router)
 
 
 def make_pool(arch: str, n_instances: int = 2, *, reduced: bool = True,
               policy: str = "srjf_calibrated", lam: float = 0.05,
-              cache_tokens: int = 4096, seed: int = 0) -> InstancePool:
+              cache_tokens: int = 4096, seed: int = 0,
+              profile: bool = False,
+              profile_lengths=(32, 64, 128)) -> InstancePool:
+    """Build N engine instances over ONE set of materialized weights.
+
+    ``profile=True`` runs the paper's profile step per instance: fits the
+    JCT linear proxy on measured forwards (so routing/admission predictions
+    start calibrated, not from the generic default) and auto-tunes the
+    prepacking budget from the fitted curve.
+    """
     cfg = get_config(arch)
     if reduced:
         cfg = reduce_config(cfg, hybrid_chunk=0)
@@ -37,55 +57,94 @@ def make_pool(arch: str, n_instances: int = 2, *, reduced: bool = True,
     params = materialize(jax.random.PRNGKey(seed), api.defs(), jnp.float32)
 
     def make_engine(name: str) -> PrefillOnlyEngine:
-        return PrefillOnlyEngine(cfg, params, EngineConfig(
+        eng = PrefillOnlyEngine(cfg, params, EngineConfig(
             policy=policy, lam=lam, cache_capacity_tokens=cache_tokens))
+        if profile:
+            eng.profile(profile_lengths)
+        return eng
 
     pool = InstancePool(make_engine)
     pool.scale_to([f"inst{i}" for i in range(n_instances)])
     return pool
 
 
-def serve_trace(arch: str = "qwen1.5-0.5b", trace_name: str = "post_recommendation",
+def serve_trace(arch: str = "qwen1.5-0.5b",
+                trace_name: str = "post_recommendation",
                 qps: float = 5.0, n_instances: int = 2,
                 scale_tokens: float = 0.02, policy: str = "srjf_calibrated",
                 lam: float = 0.05, seed: int = 0,
-                max_requests: Optional[int] = None) -> Dict:
-    """Replay a paper workload through real engines. Returns latency stats."""
-    pool = make_pool(arch, n_instances, policy=policy, lam=lam, seed=seed)
+                max_requests: Optional[int] = None,
+                router: str = "least_backlog",
+                deadline: Optional[float] = None,
+                admission: bool = True,
+                max_input_tokens: Optional[int] = None,
+                profile: bool = False,
+                pool: Optional[InstancePool] = None,
+                trace_kw: Optional[Dict] = None) -> Dict:
+    """Replay a paper workload through the AsyncServer. Returns latency
+    stats over SERVED requests plus rejection counts and a telemetry dump.
+
+    ``deadline`` is seconds after each request's arrival; with
+    ``admission=True`` doomed requests are rejected/shed instead of blowing
+    out the tail. ``pool=None`` builds a fresh pool (pass one to reuse
+    warmed engines across runs).
+    """
+    if pool is None:
+        pool = make_pool(arch, n_instances, policy=policy, lam=lam,
+                         seed=seed, profile=profile)
+    ctrl = None
+    if admission:
+        # MIL from the engines' own model config unless given explicitly —
+        # the same closed form the profile run sizes the KV budget with
+        eng_cfg = next(iter(pool.engines.values())).cfg
+        ctrl = AdmissionController(max_input_tokens=max_input_tokens,
+                                   memory_model=MemoryModel(eng_cfg))
+    server = AsyncServer(pool, router=get_router(router), admission=ctrl)
+    server.start()
     trace = get_trace(trace_name, qps, scale_tokens=scale_tokens,
                       materialize_tokens=True,
-                      vocab=min(512, get_config(arch).vocab_size), seed=seed)
+                      vocab=min(512, get_config(arch).vocab_size), seed=seed,
+                      **(trace_kw or {}))
     requests = trace.requests[:max_requests] if max_requests else trace.requests
     yes_no = (5, 9)
 
     t0 = time.perf_counter()
-    results = []
-    submitted = 0
-    i = 0
-    while i < len(requests) or any(
-            e.queue for e in pool.engines.values()):
-        now = time.perf_counter() - t0
-        while i < len(requests) and requests[i].arrival <= now:
-            r = requests[i]
-            pool.submit(r.user_id, r.tokens, allowed_tokens=yes_no)
-            submitted += 1
-            i += 1
-        if pool.step_all() == 0 and i < len(requests):
-            time.sleep(min(0.005, max(0.0, requests[i].arrival - now)))
+    futures = []
+    for r in requests:                      # open loop: real-time arrivals
+        delay = t0 + r.arrival - time.perf_counter()
+        if delay > 0:
+            time.sleep(delay)
+        futures.append(server.submit(
+            r.user_id, r.tokens, allowed_tokens=yes_no,
+            deadline=(t0 + r.arrival + deadline) if deadline else None))
+    server.drain()
     wall = time.perf_counter() - t0
+    server.shutdown()
 
-    for eng in pool.engines.values():
-        results.extend(eng.results.values())
-    lats = np.array([r["latency"] for r in results])
-    hit = sum(r["n_cached"] for r in results)
-    tot = sum(r["n_input"] for r in results)
+    outcomes = [f.result() for f in futures]
+    served = [o for o in outcomes if not isinstance(o, Rejected)]
+    rejected = [o for o in outcomes if isinstance(o, Rejected)]
+    # no fabricated samples: a fully-shed run reports NaN latency, not a
+    # vacuous 0.0 that would read as a perfect tail
+    lats = np.array([o["latency"] for o in served]) if served \
+        else np.array([np.nan])
+    hit = sum(o["n_cached"] for o in served)
+    tot = sum(o["n_input"] for o in served)
+    reasons: Dict[str, int] = {}
+    for o in rejected:
+        reasons[o.reason] = reasons.get(o.reason, 0) + 1
     return {
-        "requests": len(results),
+        "requests": len(outcomes),
+        "served": len(served),
+        "rejected": len(rejected),
+        "reject_reasons": reasons,
         "wall_seconds": wall,
-        "throughput_rps": len(results) / wall,
+        "throughput_rps": len(served) / wall,
         "mean_latency": float(lats.mean()),
+        "p50_latency": float(np.percentile(lats, 50)),
         "p99_latency": float(np.percentile(lats, 99)),
         "token_hit_rate": hit / max(tot, 1),
+        "metrics": server.metrics.render(),
         "per_instance": {n: e.stats() for n, e in pool.engines.items()},
     }
 
@@ -98,16 +157,30 @@ def main():
     ap.add_argument("--instances", type=int, default=2)
     ap.add_argument("--policy", default="srjf_calibrated",
                     choices=["fifo", "srjf", "srjf_calibrated"])
+    ap.add_argument("--router", default="least_backlog",
+                    choices=["user_hash", "least_backlog"])
+    ap.add_argument("--deadline", type=float, default=None,
+                    help="per-request deadline, seconds after arrival")
+    ap.add_argument("--no-admission", action="store_true")
+    ap.add_argument("--profile", action="store_true",
+                    help="run the JCT profile fit per instance first")
     ap.add_argument("--lam", type=float, default=0.05)
     ap.add_argument("--scale-tokens", type=float, default=0.02)
     ap.add_argument("--max-requests", type=int, default=60)
+    ap.add_argument("--dump-metrics", action="store_true")
     args = ap.parse_args()
     out = serve_trace(args.arch, args.trace, qps=args.qps,
                       n_instances=args.instances, policy=args.policy,
                       lam=args.lam, scale_tokens=args.scale_tokens,
-                      max_requests=args.max_requests)
+                      max_requests=args.max_requests, router=args.router,
+                      deadline=args.deadline,
+                      admission=not args.no_admission, profile=args.profile)
     for k, v in out.items():
-        if k != "per_instance":
+        if k == "metrics":
+            if args.dump_metrics:
+                print("--- metrics ---")
+                print(v)
+        elif k != "per_instance":
             print(f"{k}: {v}")
 
 

@@ -362,8 +362,9 @@ def _context_parallel_attention(q, k, v, *, window: int, softcap: float,
         return blocked_attention(ql, k_full, v_full, window=window,
                                  softcap=softcap, q_offset=q_off)
 
-    return jax.shard_map(local_fn, mesh=mesh, in_specs=(spec, spec, spec),
-                         out_specs=spec, check_vma=False)(q, k, v)
+    from repro.runtime.sharding import shard_map
+    return shard_map(local_fn, mesh=mesh, in_specs=(spec, spec, spec),
+                     out_specs=spec)(q, k, v)
 
 
 def attention_prefill(p: Dict, x: jax.Array, cfg: ModelConfig, *,

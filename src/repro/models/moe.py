@@ -141,12 +141,12 @@ def moe_apply(p: Dict, x: jax.Array, cfg: ModelConfig, *,
                 out = jax.lax.psum(out, ff_axes)
             return out
 
-        out = jax.shard_map(
+        from repro.runtime.sharding import shard_map
+        out = shard_map(
             local_fn, mesh=mesh,
             in_specs=(P(tok_axes if tok_axes else None, None),
                       P(None, None), w_spec, w_spec, wd_spec),
             out_specs=P(tok_axes if tok_axes else None, None),
-            check_vma=False,
         )(x.reshape(T, D), p["router"], p["w_gate"], p["w_up"], p["w_down"])
         out = out.reshape(B, S, D)
 

@@ -14,6 +14,7 @@ Serving side:
 """
 from __future__ import annotations
 
+import contextlib
 import hashlib
 import signal
 import time
@@ -21,6 +22,12 @@ from collections import deque
 from typing import Callable, Dict, List, Optional
 
 import numpy as np
+
+
+def _engine_lock(eng):
+    """The engine's queue lock when it has one (AsyncServer-driven real
+    engines), else a no-op context (simulator/test fakes)."""
+    return getattr(eng, "lock", None) or contextlib.nullcontext()
 
 
 class StepWatchdog:
@@ -123,21 +130,31 @@ class InstancePool:
                 del self.engines[n]
                 del self.healthy[n]
 
-    def mark_failed(self, name: str):
-        """Node failure: re-dispatch its queued requests to healthy peers."""
+    def mark_failed(self, name: str) -> List:
+        """Node failure: re-dispatch its queued requests to healthy peers.
+        Returns the requests that could NOT be re-homed (no healthy peer) —
+        the caller decides their fate (AsyncServer rejects their futures)."""
         if name in self.engines:
             self.healthy[name] = False
-            self._drain(name)
+            return self._drain(name)
+        return []
 
-    def _drain(self, name: str):
+    def _drain(self, name: str) -> List:
         eng = self.engines[name]
-        pending = list(getattr(eng, "queue", []))
-        eng.queue and eng.queue.clear()
+        with _engine_lock(eng):
+            pending = list(getattr(eng, "queue", []))
+            eng.queue and eng.queue.clear()
+        dropped = []
         for r in pending:
             target = self.route(r.user_id or str(r.req_id))
             if target is not None:
-                self.engines[target].queue.append(r)
+                peer = self.engines[target]
+                with _engine_lock(peer):
+                    peer.queue.append(r)
                 self.redispatched += 1
+            else:
+                dropped.append(r)
+        return dropped
 
     def live_names(self) -> List[str]:
         return [n for n, ok in self.healthy.items() if ok]

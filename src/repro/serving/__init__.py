@@ -1,0 +1,19 @@
+"""Async serving subsystem: JCT-aware routing, admission control, telemetry.
+
+The deployment shape of paper §7.1 — N single-copy PrefillOnly instances
+behind a router — as a first-class layer:
+
+  server.AsyncServer      worker thread per engine, submit() -> Future,
+                          deadlines + cancellation, drain/shutdown, health
+  router                  user-hash rendezvous | JCT-aware least-backlog
+                          with cache-affinity tie-break
+  admission               MIL + deadline feasibility -> typed Rejected
+  metrics                 counters / gauges / fixed-bucket histograms,
+                          per-instance and global, text dump
+"""
+from repro.serving.admission import AdmissionController, Rejected  # noqa: F401
+from repro.serving.metrics import (Counter, Gauge, Histogram,      # noqa: F401
+                                   MetricsRegistry)
+from repro.serving.router import (LeastBacklogRouter,              # noqa: F401
+                                  UserHashRouter, get_router)
+from repro.serving.server import AsyncServer                       # noqa: F401

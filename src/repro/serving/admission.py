@@ -1,0 +1,81 @@
+"""Admission control — reject infeasible work up front, shed doomed work early.
+
+Prefill-only JCT is precisely predictable (paper §6.3), which turns admission
+control from a heuristic into arithmetic:
+
+  * MIL check: a request longer than the engine's max input length (closed
+    form from ``kv_policy.MemoryModel``) can NEVER be served — reject at the
+    door instead of OOMing an instance.
+  * Deadline check: predicted queue delay + predicted JCT past the deadline
+    means the request is already doomed — reject it now (a typed ``Rejected``
+    result) instead of letting it queue, blow out its own latency, and drag
+    every request behind it into the tail.
+
+The in-queue half of the same policy lives in
+``PrefillOnlyEngine.shed_expired``: requests whose deadline becomes
+unreachable AFTER admission (backlog grew, cache churned) are popped before
+the next scheduling step.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.kv_policy import MemoryModel
+
+
+@dataclasses.dataclass
+class Rejected:
+    """Typed rejection — the resolve value of a request that was not served."""
+    reason: str                 # infeasible | deadline | shed | cancelled |
+                                # shutdown | no_instances
+    detail: str = ""
+    req_id: Optional[int] = None
+    user_id: Optional[str] = None
+    predicted_wait: float = 0.0
+    predicted_jct: float = 0.0
+
+
+class AdmissionController:
+    """Submit-time feasibility gate.
+
+    ``max_input_tokens`` defaults to the MIL of the paper's hybrid-prefill
+    technique computed from ``memory_model`` — the same closed form the
+    profile run uses to size the prefix-KV budget. ``deadline_slack``
+    multiplies the predicted completion time before comparing against the
+    deadline: >1 sheds earlier (conservative), <1 gambles on the predictor
+    overestimating.
+    """
+
+    def __init__(self, max_input_tokens: Optional[int] = None,
+                 memory_model: Optional[MemoryModel] = None,
+                 chunk: int = 2048, deadline_slack: float = 1.0):
+        if max_input_tokens is None and memory_model is not None:
+            max_input_tokens = memory_model.max_input_length("hybrid", chunk)
+        self.max_input_tokens = max_input_tokens
+        self.deadline_slack = deadline_slack
+        self.rejected_infeasible = 0
+        self.rejected_deadline = 0
+
+    def check(self, n_input: int, deadline: Optional[float], now: float,
+              predicted_wait: float, predicted_jct: float,
+              user_id: Optional[str] = None) -> Optional[Rejected]:
+        """None = admit; a ``Rejected`` explains why not."""
+        if (self.max_input_tokens is not None
+                and n_input > self.max_input_tokens):
+            self.rejected_infeasible += 1
+            return Rejected(
+                "infeasible",
+                f"n_input={n_input} exceeds MIL={self.max_input_tokens}",
+                user_id=user_id, predicted_jct=predicted_jct)
+        if deadline is not None:
+            eta = now + self.deadline_slack * (predicted_wait + predicted_jct)
+            if eta > deadline:
+                self.rejected_deadline += 1
+                return Rejected(
+                    "deadline",
+                    f"predicted finish {eta - now:.3f}s out, deadline in "
+                    f"{deadline - now:.3f}s",
+                    user_id=user_id, predicted_wait=predicted_wait,
+                    predicted_jct=predicted_jct)
+        return None

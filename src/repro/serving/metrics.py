@@ -1,0 +1,196 @@
+"""Serving telemetry: counters, gauges, fixed-bucket latency histograms.
+
+Metrics carry one optional ``instance`` label so the registry can report both
+per-instance and globally aggregated views (global = sum of counters, merge
+of histogram buckets — exact, since every histogram of a given name shares
+one fixed bucket table). Percentiles come from linear interpolation inside
+the bucket that crosses the target rank, clamped to the observed min/max so
+tiny samples don't report a bucket edge nobody hit.
+
+Everything is thread-safe: the serving worker threads, the submitting
+thread(s), and a stats reader may all touch the registry concurrently.
+"""
+from __future__ import annotations
+
+import math
+import threading
+from typing import Dict, List, Optional, Sequence, Tuple
+
+# 1e-4s .. ~178s upper bounds, geometric x ~1.78 (10^(1/4)) — 26 buckets
+# + overflow. Wide enough for CPU-scale JCTs and TPU-scale latencies alike.
+DEFAULT_BUCKETS: Tuple[float, ...] = tuple(
+    1e-4 * 10 ** (i / 4) for i in range(26))
+
+
+class Counter:
+    def __init__(self):
+        self._v = 0.0
+        self._lock = threading.Lock()
+
+    def inc(self, n: float = 1.0) -> None:
+        with self._lock:
+            self._v += n
+
+    @property
+    def value(self) -> float:
+        return self._v
+
+
+class Gauge:
+    def __init__(self):
+        self._v = 0.0
+
+    def set(self, v: float) -> None:
+        self._v = float(v)
+
+    @property
+    def value(self) -> float:
+        return self._v
+
+
+class Histogram:
+    """Fixed-bucket histogram; ``bounds[i]`` is the inclusive upper edge of
+    bucket i, with one implicit overflow bucket past the last edge."""
+
+    def __init__(self, bounds: Sequence[float] = DEFAULT_BUCKETS):
+        self.bounds = tuple(bounds)
+        assert self.bounds == tuple(sorted(self.bounds)) and self.bounds
+        self.counts = [0] * (len(self.bounds) + 1)
+        self.count = 0
+        self.sum = 0.0
+        self.min = math.inf
+        self.max = -math.inf
+        self._lock = threading.Lock()
+
+    def observe(self, v: float) -> None:
+        with self._lock:
+            i = 0
+            while i < len(self.bounds) and v > self.bounds[i]:
+                i += 1
+            self.counts[i] += 1
+            self.count += 1
+            self.sum += v
+            self.min = min(self.min, v)
+            self.max = max(self.max, v)
+
+    def _snapshot(self):
+        with self._lock:
+            return (list(self.counts), self.count, self.sum, self.min,
+                    self.max)
+
+    def merge(self, other: "Histogram") -> "Histogram":
+        assert self.bounds == other.bounds, "histograms must share buckets"
+        # snapshot under other's lock, apply under ours — never hold both
+        # (a worker may be observe()-ing other concurrently; reading its
+        # fields piecemeal could tear count vs counts)
+        counts, count, total, mn, mx = other._snapshot()
+        with self._lock:
+            for i, c in enumerate(counts):
+                self.counts[i] += c
+            self.count += count
+            self.sum += total
+            self.min = min(self.min, mn)
+            self.max = max(self.max, mx)
+        return self
+
+    def percentile(self, p: float) -> float:
+        """p in [0, 1]; linear interpolation within the crossing bucket."""
+        counts, count, _, mn, mx = self._snapshot()
+        if count == 0:
+            return float("nan")
+        target = p * count
+        cum = 0.0
+        for i, c in enumerate(counts):
+            if c and cum + c >= target:
+                lo = self.bounds[i - 1] if i > 0 else 0.0
+                hi = self.bounds[i] if i < len(self.bounds) else mx
+                lo, hi = max(lo, mn if cum == 0 else lo), min(hi, mx)
+                frac = max(0.0, min(1.0, (target - cum) / c))
+                return lo + frac * max(hi - lo, 0.0)
+            cum += c
+        return mx
+
+    @property
+    def mean(self) -> float:
+        return self.sum / self.count if self.count else float("nan")
+
+    def summary(self) -> Dict[str, float]:
+        _, count, total, _, mx = self._snapshot()
+        return {"count": count,
+                "mean": total / count if count else float("nan"),
+                "p50": self.percentile(0.50), "p95": self.percentile(0.95),
+                "p99": self.percentile(0.99),
+                "max": mx}
+
+
+class MetricsRegistry:
+    """Get-or-create metric store keyed by (kind, name, instance)."""
+
+    GLOBAL = ""   # instance label of the aggregate view
+
+    def __init__(self, buckets: Sequence[float] = DEFAULT_BUCKETS):
+        self._buckets = tuple(buckets)
+        self._m: Dict[Tuple[str, str, str], object] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, kind: str, name: str, instance: str, factory):
+        key = (kind, name, instance)
+        with self._lock:
+            if key not in self._m:
+                self._m[key] = factory()
+            return self._m[key]
+
+    def counter(self, name: str, instance: str = GLOBAL) -> Counter:
+        return self._get("counter", name, instance, Counter)
+
+    def gauge(self, name: str, instance: str = GLOBAL) -> Gauge:
+        return self._get("gauge", name, instance, Gauge)
+
+    def histogram(self, name: str, instance: str = GLOBAL) -> Histogram:
+        return self._get("hist", name, instance,
+                         lambda: Histogram(self._buckets))
+
+    # ---- aggregation -----------------------------------------------------
+    def _named(self, kind: str, name: str) -> List[Tuple[str, object]]:
+        with self._lock:
+            return [(k[2], v) for k, v in self._m.items()
+                    if k[0] == kind and k[1] == name]
+
+    def total(self, name: str) -> float:
+        """Global value of a counter: sum across every instance label."""
+        return sum(c.value for _, c in self._named("counter", name))
+
+    def merged_histogram(self, name: str) -> Histogram:
+        out = Histogram(self._buckets)
+        for _, h in self._named("hist", name):
+            out.merge(h)
+        return out
+
+    # ---- text dump (benchmark output) ------------------------------------
+    def render(self) -> str:
+        with self._lock:
+            items = sorted(self._m.items())
+        lines = []
+        hist_names = sorted({k[1] for k, _ in items if k[0] == "hist"})
+        for (kind, name, inst), m in items:
+            label = f"{name}{{{inst}}}" if inst else name
+            if kind == "counter":
+                lines.append(f"counter {label} {m.value:g}")
+            elif kind == "gauge":
+                lines.append(f"gauge {label} {m.value:g}")
+            else:
+                s = m.summary()
+                lines.append(
+                    f"hist {label} count={s['count']} mean={s['mean']:.4f} "
+                    f"p50={s['p50']:.4f} p95={s['p95']:.4f} "
+                    f"p99={s['p99']:.4f} max={s['max']:.4f}")
+        for name in hist_names:
+            merged = self.merged_histogram(name)
+            if merged.count:
+                s = merged.summary()
+                lines.append(
+                    f"hist {name}{{ALL}} count={s['count']} "
+                    f"mean={s['mean']:.4f} p50={s['p50']:.4f} "
+                    f"p95={s['p95']:.4f} p99={s['p99']:.4f} "
+                    f"max={s['max']:.4f}")
+        return "\n".join(lines)

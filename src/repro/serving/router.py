@@ -1,0 +1,76 @@
+"""Routing policies for the instance pool (paper §7.1 "Routing").
+
+Two policies, both deterministic given the same pool state:
+
+  * ``UserHashRouter`` — the paper's user-id rendezvous hash (elastic
+    minimal remap on scale-up/down). Ignores load entirely.
+  * ``LeastBacklogRouter`` — JCT-aware: route to the instance minimizing
+    (sum of predicted JCTs of its queue) + (predicted JCT of THIS request
+    given that instance's prefix cache). Only possible because prefill-only
+    JCT is precisely predictable — the backlog number is trustworthy, not a
+    proxy. Instances whose score ties within ``affinity_tol`` are broken by
+    cache affinity (longest cached prefix wins: the near-tied instance that
+    already holds this user's profile KV serves the request cheaper than the
+    score difference suggests), then by rendezvous hash for determinism.
+
+Routers see engines through three probes — ``pending_jct()``,
+``predict_jct(n_input, chain)``, ``cached_prefix_len(chain)`` — all
+lock-protected on the engine, so routing runs concurrently with serving.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+from repro.runtime.fault_tolerance import rendezvous_hash
+
+
+class UserHashRouter:
+    """Rendezvous (HRW) hash on user id — stateless, cache-friendly for
+    user-keyed workloads, oblivious to load."""
+
+    name = "user_hash"
+
+    def route(self, *, user_id: Optional[str], n_input: int,
+              chain: Tuple[int, ...], instances: Dict[str, object]) -> str:
+        names = sorted(instances)
+        return rendezvous_hash(user_id or "", names)
+
+
+class LeastBacklogRouter:
+    """JCT-aware least-backlog with cache-affinity tie-break."""
+
+    name = "least_backlog"
+
+    def __init__(self, affinity_tol: float = 0.15):
+        # relative score window inside which cache affinity overrides backlog
+        self.affinity_tol = affinity_tol
+
+    def route(self, *, user_id: Optional[str], n_input: int,
+              chain: Tuple[int, ...], instances: Dict[str, object]) -> str:
+        names = sorted(instances)
+        scores = {}
+        for name in names:
+            eng = instances[name]
+            scores[name] = eng.pending_jct() + eng.predict_jct(n_input, chain)
+        best = min(scores.values())
+        window = best + self.affinity_tol * max(best, 1e-9)
+        close = [n for n in names if scores[n] <= window]
+        if len(close) > 1:
+            matched = {n: instances[n].cached_prefix_len(chain)
+                       for n in close}
+            top = max(matched.values())
+            if top > 0:
+                close = [n for n in close if matched[n] == top]
+        if len(close) == 1:
+            return close[0]
+        return rendezvous_hash(user_id or "", close)
+
+
+ROUTERS = {r.name: r for r in (UserHashRouter, LeastBacklogRouter)}
+
+
+def get_router(name: str, **kw):
+    try:
+        return ROUTERS[name](**kw)
+    except KeyError:
+        raise KeyError(f"unknown router {name!r}; have {sorted(ROUTERS)}")

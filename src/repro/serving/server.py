@@ -1,0 +1,276 @@
+"""AsyncServer — non-blocking serving over a pool of PrefillOnly engines.
+
+One daemon worker thread per engine instance drives the existing ``step()``
+loop (Algorithm-1 pick + prepacked batch formation + hybrid prefill), so
+arrival handling, routing, and admission overlap with compute instead of the
+old poll-submit-step loop that interleaved them in one thread.
+
+  submit(user_id, tokens, ...) -> Future
+      routes (pluggable policy), runs admission control, enqueues on the
+      chosen engine, and returns immediately. The future resolves with the
+      engine's scored result dict, or with a typed ``Rejected`` — never an
+      exception — so callers branch on type, not try/except.
+
+  deadlines
+      a request may carry an absolute deadline. Admission rejects requests
+      that are predicted dead on arrival; workers shed queued requests whose
+      deadline becomes unreachable (``engine.shed_expired``) before every
+      step, and ``cancel(req_id)`` removes a queued request on demand.
+
+  drain / shutdown
+      ``drain()`` blocks until every admitted request has resolved;
+      ``shutdown(drain=True)`` then stops the workers. ``shutdown(False)``
+      cancels all queued work with ``Rejected("shutdown")``.
+
+  health
+      ``mark_failed(name)`` routes a dead instance's queued requests to
+      healthy peers via ``InstancePool`` (futures follow the request — the
+      peer that eventually serves it resolves the same future);
+      ``scale_to(names)`` grows/shrinks the pool and its worker threads.
+
+Telemetry lands in a ``MetricsRegistry`` (per-instance + global counters,
+queue-depth/backlog gauges, latency and step-time histograms).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import Future
+from typing import Dict, List, Optional, Sequence
+
+from repro.core.prefix_cache import token_chain
+from repro.runtime.fault_tolerance import InstancePool
+from repro.serving.admission import AdmissionController, Rejected
+from repro.serving.metrics import MetricsRegistry
+from repro.serving.router import UserHashRouter
+
+
+class AsyncServer:
+    IDLE_WAIT = 0.02   # worker poll fallback when its queue is empty
+
+    def __init__(self, pool: InstancePool, router=None,
+                 admission: Optional[AdmissionController] = None,
+                 metrics: Optional[MetricsRegistry] = None):
+        self.pool = pool
+        self.router = router or UserHashRouter()
+        self.admission = admission
+        self.metrics = metrics or MetricsRegistry()
+        self._futures: Dict[int, Future] = {}
+        self._early: Dict[int, object] = {}   # results that beat registration
+        self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._outstanding = 0
+        self._events: Dict[str, threading.Event] = {}
+        self._threads: Dict[str, threading.Thread] = {}
+        self._stop = threading.Event()
+        self._accepting = False
+
+    # ---- lifecycle -------------------------------------------------------
+    def start(self) -> "AsyncServer":
+        self._accepting = True
+        for name in self.pool.live_names():
+            self._start_worker(name)
+        return self
+
+    def _start_worker(self, name: str) -> None:
+        if name in self._threads and self._threads[name].is_alive():
+            return
+        if name not in self._events:     # keep the event stable per name:
+            self._events[name] = threading.Event()   # workers hold a ref
+        t = threading.Thread(target=self._worker, args=(name,),
+                             name=f"engine-{name}", daemon=True)
+        self._threads[name] = t
+        t.start()
+
+    def scale_to(self, names: List[str]) -> None:
+        """Elastic rebalance hook: pool.scale_to redistributes queued work
+        from removed instances; workers follow the instance set."""
+        self.pool.scale_to(names)
+        for name in self.pool.live_names():
+            self._start_worker(name)
+        self._wake_all()
+
+    def mark_failed(self, name: str) -> None:
+        """Health hook: requeue the failed instance's waiting requests onto
+        healthy peers (their futures stay valid) and retire its worker.
+        With no healthy peer left the stranded requests resolve as
+        ``Rejected`` rather than hanging their futures."""
+        for r in self.pool.mark_failed(name):
+            self._resolve(r.req_id, Rejected(
+                "no_instances", "instance failed with no healthy peer",
+                req_id=r.req_id, user_id=r.user_id))
+        self._wake_all()
+
+    def _wake_all(self) -> None:
+        for ev in self._events.values():
+            ev.set()
+
+    # ---- submission ------------------------------------------------------
+    def submit(self, user_id: Optional[str], tokens: Sequence[int], *,
+               allowed_tokens: Optional[Sequence[int]] = None,
+               deadline: Optional[float] = None) -> "Future":
+        """Non-blocking: route, admit, enqueue; resolves to a result dict or
+        a typed ``Rejected``."""
+        fut = Future()
+        fut.set_running_or_notify_cancel()
+        if not self._accepting:
+            fut.set_result(Rejected("shutdown", "server not accepting",
+                                    user_id=user_id))
+            return fut
+        live = {n: self.pool.engines[n] for n in self.pool.live_names()}
+        if not live:
+            self.metrics.counter("requests_rejected").inc()
+            fut.set_result(Rejected("no_instances", user_id=user_id))
+            return fut
+        any_engine = next(iter(live.values()))
+        chain = token_chain(tokens, any_engine.ecfg.block_size)
+        name = self.router.route(user_id=user_id, n_input=len(tokens),
+                                 chain=chain, instances=live)
+        eng = live[name]
+        now = time.perf_counter()
+        if self.admission is not None:
+            rej = self.admission.check(
+                len(tokens), deadline, now, eng.pending_jct(),
+                eng.predict_jct(len(tokens), chain), user_id=user_id)
+            if rej is not None:
+                self.metrics.counter("requests_rejected").inc()
+                self.metrics.counter(f"rejected_{rej.reason}").inc()
+                fut.set_result(rej)
+                return fut
+        rid = eng.submit(tokens, allowed_tokens, user_id=user_id,
+                         deadline=deadline, chain=chain)
+        with self._lock:
+            early = self._early.pop(rid, None)
+            if early is None:
+                self._futures[rid] = fut
+                self._outstanding += 1
+        self.metrics.counter("requests_submitted", name).inc()
+        self._events[name].set()
+        if early is not None:        # worker finished before we registered
+            fut.set_result(early)
+            return fut
+        # close the enqueue-vs-failure race: if the instance was failed (or
+        # the server stopped accepting) while we were enqueueing, the drain
+        # may have run BEFORE our append — reclaim the orphan and reject it.
+        # cancel() returning None means a worker/peer already owns it.
+        if not self.pool.healthy.get(name, False) or not self._accepting:
+            if eng.cancel(rid) is not None:
+                reason = ("shutdown" if not self._accepting
+                          else "no_instances")
+                self._resolve(rid, Rejected(reason, "instance lost after "
+                                            "enqueue", req_id=rid,
+                                            user_id=user_id))
+        return fut
+
+    def cancel(self, req_id: int) -> bool:
+        """Cancel a QUEUED request (no effect once its forward started)."""
+        for name in self.pool.live_names():
+            r = self.pool.engines[name].cancel(req_id)
+            if r is not None:
+                self._resolve(req_id, Rejected("cancelled", req_id=req_id,
+                                               user_id=r.user_id))
+                self.metrics.counter("requests_rejected").inc()
+                self.metrics.counter("rejected_cancelled").inc()
+                return True
+        return False
+
+    # ---- completion ------------------------------------------------------
+    def _resolve(self, rid: int, result) -> None:
+        with self._lock:
+            fut = self._futures.pop(rid, None)
+            if fut is None:
+                # submit() hasn't registered the future yet — park the result
+                self._early[rid] = result
+                return
+            self._outstanding -= 1
+            self._cond.notify_all()
+        fut.set_result(result)
+
+    def drain(self, timeout: Optional[float] = None) -> bool:
+        """Block until every admitted request has resolved."""
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._cond:
+            while self._outstanding > 0:
+                left = (None if deadline is None
+                        else max(0.0, deadline - time.monotonic()))
+                if left == 0.0 or not self._cond.wait(timeout=left or 0.5):
+                    if deadline is not None and time.monotonic() >= deadline:
+                        return False
+        return True
+
+    def shutdown(self, drain: bool = True,
+                 timeout: Optional[float] = None) -> None:
+        self._accepting = False
+        if drain:
+            self.drain(timeout)
+        else:
+            for name in list(self.pool.engines):
+                eng = self.pool.engines[name]
+                with eng.lock:
+                    dropped = list(eng.queue)
+                    eng.queue.clear()
+                for r in dropped:
+                    self._resolve(r.req_id, Rejected(
+                        "shutdown", req_id=r.req_id, user_id=r.user_id))
+        self._stop.set()
+        self._wake_all()
+        for t in self._threads.values():
+            t.join(timeout=5.0)
+
+    # ---- worker loop -----------------------------------------------------
+    def _worker(self, name: str) -> None:
+        ev = self._events[name]
+        m = self.metrics
+        while not self._stop.is_set():
+            # re-fetch per iteration: scale_to may replace the engine object
+            # behind a reused instance name while we were mid-step
+            eng = self.pool.engines.get(name)
+            if eng is None or not self.pool.healthy.get(name, False):
+                return                      # failed/removed: pool re-routed
+            for r in eng.shed_expired():
+                m.counter("requests_rejected").inc()
+                m.counter("rejected_shed").inc()
+                self._resolve(r.req_id, Rejected(
+                    "shed", "deadline unreachable in queue",
+                    req_id=r.req_id, user_id=r.user_id))
+            t0 = time.perf_counter()
+            try:
+                rid = eng.step()
+            except Exception:
+                # a dying worker must not strand futures: the mid-step batch
+                # resolves Rejected, the instance is failed so queued work
+                # requeues to peers (or resolves Rejected itself)
+                self.metrics.counter("engine_errors", name).inc()
+                for lost in list(getattr(eng, "_inflight", [])):
+                    self._resolve(lost, Rejected(
+                        "error", "instance failed mid-step", req_id=lost))
+                self.mark_failed(name)
+                return
+            if rid is None:
+                ev.wait(timeout=self.IDLE_WAIT)
+                ev.clear()
+                continue
+            m.histogram("step_seconds", name).observe(
+                time.perf_counter() - t0)
+            with eng.lock:
+                # pop: the future is the delivery channel under the server;
+                # leaving results behind would grow memory with every request
+                served = [(i, eng.results.pop(i)) for i in eng.last_step_ids]
+                depth = len(eng.queue)
+            m.gauge("queue_depth", name).set(depth)
+            m.gauge("backlog_seconds", name).set(eng.pending_jct())
+            for rid2, res in served:
+                m.counter("requests_served", name).inc()
+                m.histogram("latency_seconds", name).observe(res["latency"])
+                self._resolve(rid2, res)
+
+    # ---- introspection ---------------------------------------------------
+    def stats(self) -> Dict:
+        return {
+            "served": self.metrics.total("requests_served"),
+            "rejected": self.metrics.total("requests_rejected"),
+            "latency": self.metrics.merged_histogram(
+                "latency_seconds").summary(),
+            "per_instance": {n: self.pool.engines[n].stats()
+                             for n in self.pool.live_names()},
+        }

@@ -82,12 +82,11 @@ def test_async_checkpointer(tmp_path):
 def test_elastic_restore_with_shardings(tmp_path):
     """Restore re-places arrays under new shardings (single-device here,
     but exercises the device_put path the 512-chip restore uses)."""
-    import jax
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.launch.mesh import make_mesh
     tree = _tree()
     save_checkpoint(tmp_path, 1, tree)
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((1,), ("data",))
     sh = NamedSharding(mesh, P())
     shardings = {"params": {"w": sh, "b": sh}, "step": sh}
     _, restored = restore_checkpoint(tmp_path, tree, shardings=shardings)

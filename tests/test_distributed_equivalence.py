@@ -37,8 +37,8 @@ batch = make_batch(cfg, 8, 64, jax.random.PRNGKey(1))
 ref_loss = float(api.train_loss(params, batch))
 
 out = {"ref": ref_loss}
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((2, 4), ("data", "model"))
 for name, overrides in [("tp", None), ("dp", PRESETS["dp_full"])]:
     rules = rules_for(cfg, shp, mesh, overrides=overrides)
     bundle = build_step(cfg, shp, mesh, rules)

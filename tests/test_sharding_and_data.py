@@ -10,8 +10,8 @@ from repro.runtime.hlo_analysis import parse_hlo
 
 
 def _mesh22():
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    return make_mesh((1, 1), ("data", "model"))
 
 
 class _FakeMesh:
@@ -64,8 +64,7 @@ def test_param_defs_materialize_and_abstract_agree():
 
 
 def test_optimizer_shardings_add_dp_axis():
-    mesh = jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = _mesh22()
     defs = {"w": shd.pdef((4, 8), (None, None))}
     opt = shd.optimizer_shardings(defs, mesh)
     assert opt["w"].spec is not None  # well-formed under degenerate mesh
