@@ -30,6 +30,25 @@ def _engine_lock(eng):
     return getattr(eng, "lock", None) or contextlib.nullcontext()
 
 
+def _block_size(eng) -> Optional[int]:
+    return getattr(getattr(eng, "ecfg", None), "block_size", None)
+
+
+def _rechain(req, old, peer) -> None:
+    """Re-cut a re-homed request's block-hash chain at the RECEIVING
+    engine's block size. Chains are granular in block size; on a
+    heterogeneous pool a chain cut for ``old`` would silently miss (and,
+    worse, corrupt inserts into) ``peer``'s prefix cache. No-op for test
+    fakes without ``ecfg``/``tokens``."""
+    bs_old, bs_new = _block_size(old), _block_size(peer)
+    tokens = getattr(req, "tokens", None)
+    if (bs_new is None or bs_new == bs_old or tokens is None
+            or getattr(req, "chain", None) is None):
+        return
+    from repro.core.prefix_cache import token_chain  # lazy: avoid cycle
+    req.chain = token_chain(tokens, bs_new)
+
+
 class StepWatchdog:
     """Flags steps slower than ``factor`` x running p95 (straggler signal)."""
 
@@ -119,16 +138,26 @@ class InstancePool:
         self.healthy: Dict[str, bool] = {}
         self.redispatched = 0
 
-    def scale_to(self, names: List[str]):
+    def scale_to(self, names: List[str]) -> List:
+        """Grow/shrink the pool. Returns the requests that could NOT be
+        re-homed from removed instances (no healthy peer) — the caller
+        decides their fate (AsyncServer rejects their futures)."""
         for n in names:
             if n not in self.engines:
                 self.engines[n] = self.make_engine(n)
                 self.healthy[n] = True
-        for n in list(self.engines):
-            if n not in names:
-                self._drain(n)
-                del self.engines[n]
-                del self.healthy[n]
+        removed = [n for n in self.engines if n not in names]
+        # mark every removed instance unhealthy BEFORE draining any of them:
+        # route() must not re-home queued work onto an instance that is
+        # itself about to be deleted (or back onto the one being drained)
+        for n in removed:
+            self.healthy[n] = False
+        dropped = []
+        for n in removed:
+            dropped.extend(self._drain(n))
+            del self.engines[n]
+            del self.healthy[n]
+        return dropped
 
     def mark_failed(self, name: str) -> List:
         """Node failure: re-dispatch its queued requests to healthy peers.
@@ -149,6 +178,7 @@ class InstancePool:
             target = self.route(r.user_id or str(r.req_id))
             if target is not None:
                 peer = self.engines[target]
+                _rechain(r, eng, peer)
                 with _engine_lock(peer):
                     peer.queue.append(r)
                 self.redispatched += 1

@@ -16,12 +16,26 @@ Two policies, both deterministic given the same pool state:
 Routers see engines through three probes — ``pending_jct()``,
 ``predict_jct(n_input, chain)``, ``cached_prefix_len(chain)`` — all
 lock-protected on the engine, so routing runs concurrently with serving.
+
+``chain`` is the request's block-hash chain. Chains are granular in the
+engine's block size, so on a heterogeneous pool a single chain cannot probe
+every engine: callers pass ``chains`` (block_size -> chain) and each engine
+is probed with the chain cut at ITS block size.
 """
 from __future__ import annotations
 
 from typing import Dict, Optional, Tuple
 
 from repro.runtime.fault_tolerance import rendezvous_hash
+
+
+def chain_for(eng, chain: Tuple[int, ...],
+              chains: Optional[Dict[int, Tuple[int, ...]]]):
+    """The chain cut at ``eng``'s block size, falling back to ``chain``."""
+    if not chains:
+        return chain
+    bs = getattr(getattr(eng, "ecfg", None), "block_size", None)
+    return chains.get(bs, chain)
 
 
 class UserHashRouter:
@@ -31,7 +45,8 @@ class UserHashRouter:
     name = "user_hash"
 
     def route(self, *, user_id: Optional[str], n_input: int,
-              chain: Tuple[int, ...], instances: Dict[str, object]) -> str:
+              chain: Tuple[int, ...], instances: Dict[str, object],
+              chains: Optional[Dict[int, Tuple[int, ...]]] = None) -> str:
         names = sorted(instances)
         return rendezvous_hash(user_id or "", names)
 
@@ -46,18 +61,20 @@ class LeastBacklogRouter:
         self.affinity_tol = affinity_tol
 
     def route(self, *, user_id: Optional[str], n_input: int,
-              chain: Tuple[int, ...], instances: Dict[str, object]) -> str:
+              chain: Tuple[int, ...], instances: Dict[str, object],
+              chains: Optional[Dict[int, Tuple[int, ...]]] = None) -> str:
         names = sorted(instances)
         scores = {}
         for name in names:
             eng = instances[name]
-            scores[name] = eng.pending_jct() + eng.predict_jct(n_input, chain)
+            scores[name] = eng.pending_jct() + eng.predict_jct(
+                n_input, chain_for(eng, chain, chains))
         best = min(scores.values())
         window = best + self.affinity_tol * max(best, 1e-9)
         close = [n for n in names if scores[n] <= window]
         if len(close) > 1:
-            matched = {n: instances[n].cached_prefix_len(chain)
-                       for n in close}
+            matched = {n: instances[n].cached_prefix_len(
+                chain_for(instances[n], chain, chains)) for n in close}
             top = max(matched.values())
             if top > 0:
                 close = [n for n in close if matched[n] == top]

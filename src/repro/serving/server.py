@@ -84,10 +84,16 @@ class AsyncServer:
 
     def scale_to(self, names: List[str]) -> None:
         """Elastic rebalance hook: pool.scale_to redistributes queued work
-        from removed instances; workers follow the instance set."""
-        self.pool.scale_to(names)
+        from removed instances; workers follow the instance set. Requests
+        the pool could not re-home resolve as ``Rejected`` (mirroring
+        ``mark_failed``) instead of hanging their futures."""
+        dropped = self.pool.scale_to(names)
         for name in self.pool.live_names():
             self._start_worker(name)
+        for r in dropped:
+            self._reject(r.req_id, Rejected(
+                "no_instances", "instance removed with no healthy peer",
+                req_id=r.req_id, user_id=r.user_id))
         self._wake_all()
 
     def mark_failed(self, name: str) -> None:
@@ -96,13 +102,14 @@ class AsyncServer:
         With no healthy peer left the stranded requests resolve as
         ``Rejected`` rather than hanging their futures."""
         for r in self.pool.mark_failed(name):
-            self._resolve(r.req_id, Rejected(
+            self._reject(r.req_id, Rejected(
                 "no_instances", "instance failed with no healthy peer",
                 req_id=r.req_id, user_id=r.user_id))
         self._wake_all()
 
     def _wake_all(self) -> None:
-        for ev in self._events.values():
+        # snapshot: submit() may insert an event concurrently (setdefault)
+        for ev in list(self._events.values()):
             ev.set()
 
     # ---- submission ------------------------------------------------------
@@ -119,22 +126,31 @@ class AsyncServer:
             return fut
         live = {n: self.pool.engines[n] for n in self.pool.live_names()}
         if not live:
-            self.metrics.counter("requests_rejected").inc()
-            fut.set_result(Rejected("no_instances", user_id=user_id))
+            rej = Rejected("no_instances", user_id=user_id)
+            self._count_rejection(rej)
+            fut.set_result(rej)
             return fut
-        any_engine = next(iter(live.values()))
-        chain = token_chain(tokens, any_engine.ecfg.block_size)
+        # chains are granular in the engine's block size: on a heterogeneous
+        # pool, routing/admission probes and the enqueue must each see the
+        # chain cut at THEIR engine's block size, or cache matching (and the
+        # cache inserts keyed on the chain) silently misfire
+        chains: Dict[int, tuple] = {}
+        for e in live.values():
+            bs = e.ecfg.block_size
+            if bs not in chains:
+                chains[bs] = token_chain(tokens, bs)
         name = self.router.route(user_id=user_id, n_input=len(tokens),
-                                 chain=chain, instances=live)
+                                 chain=next(iter(chains.values())),
+                                 instances=live, chains=chains)
         eng = live[name]
+        chain = chains[eng.ecfg.block_size]
         now = time.perf_counter()
         if self.admission is not None:
             rej = self.admission.check(
                 len(tokens), deadline, now, eng.pending_jct(),
                 eng.predict_jct(len(tokens), chain), user_id=user_id)
             if rej is not None:
-                self.metrics.counter("requests_rejected").inc()
-                self.metrics.counter(f"rejected_{rej.reason}").inc()
+                self._count_rejection(rej)
                 fut.set_result(rej)
                 return fut
         rid = eng.submit(tokens, allowed_tokens, user_id=user_id,
@@ -145,7 +161,10 @@ class AsyncServer:
                 self._futures[rid] = fut
                 self._outstanding += 1
         self.metrics.counter("requests_submitted", name).inc()
-        self._events[name].set()
+        # setdefault: the worker for an instance added via pool.scale_to()
+        # directly (or racing server.scale_to) may not exist yet — the event
+        # must, so _start_worker can hand it over
+        self._events.setdefault(name, threading.Event()).set()
         if early is not None:        # worker finished before we registered
             fut.set_result(early)
             return fut
@@ -157,9 +176,9 @@ class AsyncServer:
             if eng.cancel(rid) is not None:
                 reason = ("shutdown" if not self._accepting
                           else "no_instances")
-                self._resolve(rid, Rejected(reason, "instance lost after "
-                                            "enqueue", req_id=rid,
-                                            user_id=user_id))
+                self._reject(rid, Rejected(reason, "instance lost after "
+                                           "enqueue", req_id=rid,
+                                           user_id=user_id))
         return fut
 
     def cancel(self, req_id: int) -> bool:
@@ -167,14 +186,23 @@ class AsyncServer:
         for name in self.pool.live_names():
             r = self.pool.engines[name].cancel(req_id)
             if r is not None:
-                self._resolve(req_id, Rejected("cancelled", req_id=req_id,
-                                               user_id=r.user_id))
-                self.metrics.counter("requests_rejected").inc()
-                self.metrics.counter("rejected_cancelled").inc()
+                self._reject(req_id, Rejected("cancelled", req_id=req_id,
+                                              user_id=r.user_id))
                 return True
         return False
 
     # ---- completion ------------------------------------------------------
+    def _count_rejection(self, rej: Rejected) -> None:
+        """Single site for the rejection counter pair — every rejection
+        path must keep stats() in sync with actual outcomes."""
+        self.metrics.counter("requests_rejected").inc()
+        self.metrics.counter(f"rejected_{rej.reason}").inc()
+
+    def _reject(self, rid: int, rej: Rejected) -> None:
+        """Resolve an already-registered request as ``Rejected``."""
+        self._count_rejection(rej)
+        self._resolve(rid, rej)
+
     def _resolve(self, rid: int, result) -> None:
         with self._lock:
             fut = self._futures.pop(rid, None)
@@ -201,16 +229,17 @@ class AsyncServer:
     def shutdown(self, drain: bool = True,
                  timeout: Optional[float] = None) -> None:
         self._accepting = False
-        if drain:
-            self.drain(timeout)
-        else:
+        drained = self.drain(timeout) if drain else False
+        if not drained:
+            # not draining, or drain timed out: every still-queued request
+            # must resolve (``Rejected``) — never strand a future
             for name in list(self.pool.engines):
                 eng = self.pool.engines[name]
                 with eng.lock:
                     dropped = list(eng.queue)
                     eng.queue.clear()
                 for r in dropped:
-                    self._resolve(r.req_id, Rejected(
+                    self._reject(r.req_id, Rejected(
                         "shutdown", req_id=r.req_id, user_id=r.user_id))
         self._stop.set()
         self._wake_all()
@@ -228,9 +257,7 @@ class AsyncServer:
             if eng is None or not self.pool.healthy.get(name, False):
                 return                      # failed/removed: pool re-routed
             for r in eng.shed_expired():
-                m.counter("requests_rejected").inc()
-                m.counter("rejected_shed").inc()
-                self._resolve(r.req_id, Rejected(
+                self._reject(r.req_id, Rejected(
                     "shed", "deadline unreachable in queue",
                     req_id=r.req_id, user_id=r.user_id))
             t0 = time.perf_counter()
@@ -242,7 +269,7 @@ class AsyncServer:
                 # requeues to peers (or resolves Rejected itself)
                 self.metrics.counter("engine_errors", name).inc()
                 for lost in list(getattr(eng, "_inflight", [])):
-                    self._resolve(lost, Rejected(
+                    self._reject(lost, Rejected(
                         "error", "instance failed mid-step", req_id=lost))
                 self.mark_failed(name)
                 return

@@ -94,6 +94,22 @@ def test_pool_redispatch_on_failure():
     assert pool.redispatched == n_victim
 
 
+def test_pool_scale_down_rehomes_queued_to_survivors():
+    pool = InstancePool(_FakeEngine)
+    pool.scale_to(["a", "b", "c"])
+    for u in range(30):
+        pool.submit(f"user{u}", [1, 2, 3])
+    queued_before = sum(len(e.queue) for e in pool.engines.values())
+    dropped = pool.scale_to(["a"])
+    assert dropped == []                  # every request found a survivor
+    assert set(pool.engines) == {"a"}
+    assert len(pool.engines["a"].queue) == queued_before  # nothing lost
+    # shrink to nothing: no healthy peer -> requests come back to the caller
+    dropped = pool.scale_to([])
+    assert len(dropped) == queued_before
+    assert pool.live_names() == []
+
+
 def test_pool_elastic_scale_up_down():
     pool = InstancePool(_FakeEngine)
     pool.scale_to(["a", "b"])

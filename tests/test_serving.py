@@ -90,7 +90,8 @@ class FakeEngine:
     def submit(self, tokens, allowed_tokens=None, user_id=None, now=None,
                deadline=None, chain=None):
         r = Request(n_input=len(tokens), arrival=time.perf_counter(),
-                    chain=chain or token_chain(tokens, 16),
+                    chain=chain or token_chain(tokens,
+                                               self.ecfg.block_size),
                     tokens=list(tokens), user_id=user_id, deadline=deadline)
         with self.lock:
             self.queue.append(r)
@@ -123,7 +124,8 @@ class FakeEngine:
         return self.a * (n - self.cached_prefix_len(chain))
 
     def cached_prefix_len(self, chain):
-        return 16 * len(chain) if tuple(chain) in self.cached else 0
+        return (self.ecfg.block_size * len(chain)
+                if tuple(chain) in self.cached else 0)
 
     def step(self):
         with self.lock:
@@ -363,6 +365,107 @@ def test_server_worker_crash_fails_instance_and_requeues():
         assert srv.metrics.total("engine_errors") == 1
     finally:
         srv.shutdown()
+
+
+def test_server_scale_down_rehomes_queued_requests():
+    """Shrinking the pool must re-home queued work to survivors — every
+    future still resolves with a served result, none re-routed back onto
+    the instance being removed."""
+    pool = _fake_pool(2, sec_per_token=1e-2)
+    srv = AsyncServer(pool, router=get_router("user_hash"))
+    srv.start()
+    try:
+        futs = [srv.submit(f"u{i}", list(range(50))) for i in range(8)]
+        srv.scale_to(["i0"])
+        assert "i1" not in pool.engines
+        assert srv.drain(timeout=20)
+        for f in futs:
+            assert not isinstance(f.result(timeout=1), Rejected)
+    finally:
+        srv.shutdown()
+
+
+def test_server_scale_to_empty_rejects_stranded_futures():
+    """Removing the LAST instance must resolve its queued futures as
+    Rejected('no_instances') instead of hanging drain() forever."""
+    pool = _fake_pool(1, sec_per_token=1e-2)
+    srv = AsyncServer(pool, router=get_router("user_hash"))
+    srv.start()
+    try:
+        futs = [srv.submit("u", list(range(100))) for _ in range(4)]
+        srv.scale_to([])
+        assert srv.drain(timeout=10)
+        outcomes = [f.result(timeout=5) for f in futs]
+        rejected = [o for o in outcomes if isinstance(o, Rejected)]
+        assert rejected and all(o.reason == "no_instances" for o in rejected)
+    finally:
+        srv.shutdown()
+
+
+def test_submit_chain_cut_at_routed_engines_block_size():
+    """Heterogeneous pool: the enqueued request's prefix chain must be cut
+    at the CHOSEN engine's block size, not an arbitrary peer's."""
+    from repro.runtime.fault_tolerance import rendezvous_hash
+    pool = _fake_pool(2)
+    pool.engines["i1"].ecfg = _BS8()      # i0 keeps block_size 16
+    uid = next(u for u in (f"u{i}" for i in range(50))
+               if rendezvous_hash(u, ["i0", "i1"]) == "i1")
+    srv = AsyncServer(pool, router=get_router("user_hash"))
+    srv._accepting = True                 # accept without starting workers
+    tokens = list(range(32))
+    srv.submit(uid, tokens)
+    r = pool.engines["i1"].queue[0]
+    assert tuple(r.chain) == token_chain(tokens, 8)
+
+
+class _BS8:
+    block_size = 8
+
+
+def test_least_backlog_probes_with_per_blocksize_chains():
+    """Heterogeneous pool: each engine must be probed with the chain cut at
+    ITS block size, or the warm instance's cache match never fires."""
+    tokens = list(range(64))
+    pool = _fake_pool(2)
+    warm = pool.engines["i1"]
+    warm.ecfg = _BS8()                    # i0 keeps block_size 16
+    chain8 = token_chain(tokens, 8)
+    warm.cached.add(tuple(chain8))
+    engines = {n: pool.engines[n] for n in pool.live_names()}
+    chains = {16: token_chain(tokens, 16), 8: chain8}
+    r = LeastBacklogRouter()
+    assert r.route(user_id="u", n_input=64, chain=chains[16],
+                   instances=engines, chains=chains) == "i1"
+    # probed with only the bs-16 chain, i1's cache would never match
+    assert warm.cached_prefix_len(chains[16]) == 0
+    assert warm.cached_prefix_len(chain8) == 64
+
+
+def test_drain_rechains_requests_across_block_sizes():
+    """A request re-homed onto a peer with a different block size must get
+    its chain re-cut at the peer's block size (a stale-granularity chain
+    would corrupt the peer's prefix cache)."""
+    pool = _fake_pool(2, sec_per_token=1e-2)
+    pool.engines["i1"].ecfg = _BS8()
+    tokens = list(range(32))
+    pool.engines["i0"].submit(tokens, chain=token_chain(tokens, 16))
+    pool.mark_failed("i0")
+    r = pool.engines["i1"].queue[0]
+    assert tuple(r.chain) == token_chain(tokens, 8)
+
+
+def test_server_shutdown_drain_timeout_rejects_queued():
+    """shutdown(drain=True, timeout=...) whose drain times out must still
+    resolve every queued future (Rejected('shutdown')), not strand them."""
+    pool = _fake_pool(1, sec_per_token=1e-2)
+    srv = AsyncServer(pool, router=get_router("user_hash"))
+    srv.start()
+    futs = [srv.submit("u", list(range(100))) for _ in range(6)]
+    srv.shutdown(drain=True, timeout=0.05)
+    outcomes = [f.result(timeout=5) for f in futs]
+    assert all(f.done() for f in futs)
+    assert any(isinstance(o, Rejected) and o.reason == "shutdown"
+               for o in outcomes)
 
 
 def test_server_shutdown_without_drain_rejects_queued():
