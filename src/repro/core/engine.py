@@ -26,14 +26,27 @@ boundary). Single-token output makes this safe: each packed request needs
 only its own last-row logits.
 
 Batch formation preserves Algorithm 1: the *anchor* request is still the
-scheduler's pick. If the anchor has a usable cached prefix it runs solo via
-the suffix path; otherwise first-fit-decreasing backfill fills the remaining
-``pack_token_budget`` with further cache-miss requests, largest first —
-short requests ride in the padding slack that bucketing would have burned
-anyway. Each packed request's KV is sliced out of the packed forward and
-inserted into the prefix cache under its own hash chain (suffix discard
-still applies), and the JCT model observes (total packed tokens, wall time)
-so SRJF-calibrated scoring stays calibrated for packed steps.
+scheduler's pick. First-fit-decreasing backfill fills the remaining
+``pack_token_budget`` (counted in COMPUTED tokens) with further requests,
+largest first — short requests ride in the padding slack that bucketing
+would have burned anyway. Each packed request's KV is sliced out of the
+packed forward and inserted into the prefix cache under its own hash chain
+(suffix discard still applies), and the JCT model observes (computed tokens,
+wall time) so SRJF-calibrated scoring stays calibrated for packed steps.
+
+Prefix-aware packing (the packed cache-HIT path)
+------------------------------------------------
+Cache-hit requests co-pack too: each hit segment contributes only its
+SUFFIX tokens to the packed forward and attends its cached prefix KV
+through a gathered per-segment prefix buffer (position-masked
+segment-restricted attention — ``tfm.prefill_packed_with_prefix``). A small
+per-candidate cost model chooses between {solo suffix, packed miss, packed
+hit}: a candidate joins the batch only when the packed-step JCT estimate
+over bucketed forward sizes beats running it sequentially. Prefix sharers
+whose shared prefix is ALREADY cached can therefore co-pack (each attends
+its own gathered copy); sharers whose prefix is not yet cached still run
+sequentially so the later one hits the earlier one's freshly inserted KV
+(BatchLLM's global-prefix observation).
 """
 from __future__ import annotations
 
@@ -51,6 +64,7 @@ from repro.core.jct import LinearProxyJCT, Sample
 from repro.core.prefix_cache import PrefixCache, token_chain
 from repro.core.scheduler import Request, Scheduler
 from repro.models import transformer as tfm
+from repro.models.layers import PAD_POS
 from repro.models.model import cast_params
 
 
@@ -75,9 +89,22 @@ class EngineConfig:
     kv_keep_tokens: int = 10**9        # suffix discard threshold (per request)
     suffix_buckets: Tuple[int, ...] = (64, 128, 256, 512, 1024, 2048)
     prefix_bucket_blocks: int = 4      # reuse granularity: 4 blocks = 64 tok
-    pack_token_budget: int = 2048      # prepacking: max packed tokens/step
+    pack_token_budget: int = 2048      # prepacking: max COMPUTED tokens/step
     max_pack_requests: int = 16        # prepacking: max segments per step
                                        # (<=1 disables batch formation)
+    pack_prefix_budget: int = 4096     # packed-hit path: max gathered prefix
+                                       # tokens per step (attended, not
+                                       # computed — cheaper than suffix toks)
+    prefix_buckets: Tuple[int, ...] = (128, 256, 384, 512, 1024, 2048, 4096)
+                                       # per-segment gathered-prefix pad
+                                       # ladder: 128-steps below 512 (the
+                                       # batched hit attention pays compute
+                                       # proportional to pmax, so tight pads
+                                       # matter), doubling above (the jit
+                                       # key is (S, Nb, smax, pmax, K) and
+                                       # batch composition shifts step to
+                                       # step — a fine ladder up high would
+                                       # recompile in steady state)
     autotune_pack: bool = True         # retune both from the profile() fit
     pack_inflation: float = 2.0        # max anchor-step slowdown autotune
                                        # accepts vs a typical solo step
@@ -102,12 +129,17 @@ class PrefillOnlyEngine:
         self.cache = PrefixCache(ecfg.cache_capacity_tokens // ecfg.block_size,
                                  ecfg.block_size)
         self.jct_model = LinearProxyJCT()
-        self.scheduler = Scheduler(ecfg.policy, self.jct_model, ecfg.lam)
+        # usable_prefix hook: Algorithm-1 scores must price requests against
+        # the prefix a forward would actually reuse, matching the hit-aware
+        # predict_jct/pending_jct/shed probes — not the raw token match
+        self.scheduler = Scheduler(ecfg.policy, self.jct_model, ecfg.lam,
+                                   usable_prefix=self._usable_prefix_len)
         self.queue: List[Request] = []
         self.results: Dict[int, Dict] = {}
         self._fresh_fns: Dict[Tuple[int, int], callable] = {}
         self._suffix_fns: Dict[Tuple[int, int, int], callable] = {}
         self._packed_fns: Dict[Tuple[int, int], callable] = {}
+        self._packed_hit_fns: Dict[Tuple[int, int, int], callable] = {}
         self._last_step_ids: List[int] = []    # all requests served by the
                                                # most recent step()
         self._inflight: List[int] = []         # popped by step(), not yet in
@@ -119,6 +151,7 @@ class PrefillOnlyEngine:
         self.total_tokens = 0
         self.packed_steps = 0          # steps that executed >1 request
         self.packed_requests = 0       # requests served via prepacking
+        self.packed_hit_requests = 0   # ...of which rode a cached prefix
         self.padded_slots = 0          # bucketed forward slots actually paid
         self._step_compiled = False    # step hit a fresh jit shape
 
@@ -162,8 +195,14 @@ class PrefillOnlyEngine:
         budget = max([floor] + [s for s in ecfg.suffix_buckets
                                 if m.predict(s) <= max_step])
         n_max = int(np.clip(budget // max(1, ecfg.suffix_buckets[0]), 1, 64))
+        # gathered prefix tokens are attended, not computed — the per-token
+        # cost the proxy fits barely sees them, so the hit path can carry a
+        # proportionally larger prefix buffer than its computed budget
         self.ecfg = dataclasses.replace(ecfg, pack_token_budget=budget,
-                                        max_pack_requests=n_max)
+                                        max_pack_requests=n_max,
+                                        pack_prefix_budget=max(
+                                            ecfg.pack_prefix_budget,
+                                            2 * budget))
         return budget, n_max
 
     # ---- request lifecycle ---------------------------------------------------
@@ -205,7 +244,9 @@ class PrefillOnlyEngine:
             for r in self.queue:
                 if r.deadline is not None and (
                         now + self.jct_model.predict(
-                            r.n_input, self.cache.match_len(r.chain))
+                            r.n_input, self._usable_prefix_len(
+                                r.n_input,
+                                self.cache.match_blocks(r.chain)))
                         > r.deadline):
                     shed.append(r)
                 else:
@@ -226,12 +267,20 @@ class PrefillOnlyEngine:
         O(queue x chain) walk under the engine lock would contend with the
         worker exactly when routing matters most. The estimate only errs
         conservative (the cache can have warmed since arrival, never
-        cooled for a queued request's own prefix)."""
+        cooled for a queued request's own prefix).
+
+        Hit-aware: the raw match is first bucketed down to the prefix the
+        engine would actually REUSE (``_usable_prefix_len``), so the backlog
+        the router ranks by reflects real computed-token cost, not an
+        optimistic token-granular match."""
         now = time.perf_counter() if now is None else now
+        bs = self.ecfg.block_size
         with self.lock:
-            queued = sum(self.jct_model.predict(r.n_input,
-                                                r.n_cached_at_arrival)
-                         for r in self.queue)
+            queued = sum(
+                self.jct_model.predict(
+                    r.n_input, self._usable_prefix_len(
+                        r.n_input, r.n_cached_at_arrival // bs))
+                for r in self.queue)
             running = 0.0
             if self._inflight:
                 running = max(0.0, self._inflight_pred
@@ -240,9 +289,13 @@ class PrefillOnlyEngine:
 
     def predict_jct(self, n_input: int, chain: Tuple[int, ...] = ()) -> float:
         """Predicted JCT of a PROSPECTIVE request given this instance's
-        cache state (router's per-instance cost probe)."""
+        cache state (router's per-instance cost probe). Hit-aware: predicts
+        against the reuse-granularity prefix the engine would actually use,
+        never the raw (token-granular, whole-request-consuming) match."""
         with self.lock:
-            return self.jct_model.predict(n_input, self.cache.match_len(chain))
+            return self.jct_model.predict(
+                n_input, self._usable_prefix_len(
+                    n_input, self.cache.match_blocks(chain)))
 
     def cached_prefix_len(self, chain: Tuple[int, ...]) -> int:
         with self.lock:
@@ -264,8 +317,7 @@ class PrefillOnlyEngine:
         with self.lock:
             self._inflight = [r.req_id for r in batch]
             self._inflight_pred = sum(
-                self.jct_model.predict(r.n_input,
-                                       self.cache.match_len(r.chain))
+                self.jct_model.predict(r.n_input, self._usable_prefix(r))
                 for r in batch)
             self._inflight_t0 = now
         self._step_compiled = False
@@ -292,13 +344,19 @@ class PrefillOnlyEngine:
                 for n, r in enumerate(batch):
                     r.finish_time = done
                     self.results[r.req_id] = self._score(logits[n:n + 1], r)
-                # packed cost is a function of TOTAL packed tokens: report it
-                # on the same miss-token axis Algorithm 1 scores with
+                # packed cost is a function of COMPUTED tokens — misses
+                # compute all their tokens, hits only their suffixes: report
+                # it on the same miss-token axis Algorithm 1 scores with, so
+                # mixed hit/miss batches don't skew the fit that
+                # autotune_packing and admission feasibility consume
                 if not self._step_compiled:
-                    self.jct_model.observe(sum(r.n_input for r in batch), 0,
-                                           done - now)
+                    self.jct_model.observe(
+                        sum(r.n_input - r.n_cached_at_start for r in batch),
+                        0, done - now)
             self.packed_steps += 1
             self.packed_requests += len(batch)
+            self.packed_hit_requests += sum(
+                1 for r in batch if r.n_cached_at_start > 0)
         self.steps += 1
         self._last_step_ids = [r.req_id for r in batch]
         with self.lock:
@@ -307,31 +365,55 @@ class PrefillOnlyEngine:
         return batch[0].req_id
 
     # ---- batch formation (prepacking) ---------------------------------------
-    def _usable_prefix(self, r: Request, touch: bool = False) -> int:
-        """Bucketed prefix-reuse length for ``r`` against the current cache
-        (granularity ``prefix_bucket_blocks``; >=1 fresh token guaranteed)."""
+    def _usable_prefix_len(self, n_input: int, matched_blocks: int) -> int:
+        """Bucketed prefix-reuse length given a raw cache match in blocks
+        (granularity ``prefix_bucket_blocks``; >=1 fresh token guaranteed —
+        the last token's logits must be computed). Static arithmetic shared
+        by execution and by the hit-aware routing/shedding probes, so
+        predictions match what a forward would actually reuse."""
         bs = self.ecfg.block_size
         gran = self.ecfg.prefix_bucket_blocks
-        matched = self.cache.match_blocks(r.chain, touch=touch)
-        prefix_len = (matched // gran) * gran * bs
-        if prefix_len >= r.n_input:
-            # never consume the whole request from cache — the last token's
-            # logits must be computed
-            prefix_len = max(0, ((r.n_input - 1) // (gran * bs)) * gran * bs)
+        prefix_len = (matched_blocks // gran) * gran * bs
+        if prefix_len >= n_input:
+            prefix_len = max(0, ((n_input - 1) // (gran * bs)) * gran * bs)
         return prefix_len
 
+    def _usable_prefix(self, r: Request, touch: bool = False) -> int:
+        """Bucketed prefix-reuse length for ``r`` against the current cache."""
+        return self._usable_prefix_len(
+            r.n_input, self.cache.match_blocks(r.chain, touch=touch))
+
     def _form_batch(self, now: float) -> Optional[List[Request]]:
-        """Algorithm 1 pick + first-fit-decreasing backfill.
+        """Algorithm 1 pick + cost-modeled first-fit-decreasing backfill.
 
         The anchor is exactly the scheduler's pick, so SRJF-calibrated order
-        is preserved. A cache-hit anchor runs solo (the suffix path computes
-        fewer tokens than any packed forward would). A cache-miss anchor's
-        padding slack is backfilled with further cache-miss requests, largest
-        first (FFD maximizes bucket fill), up to ``pack_token_budget`` /
-        ``max_pack_requests``. Requests sharing a prefix root (same first
-        hash-chain block) are never co-packed: running sharers sequentially
-        lets the later ones hit the earlier one's cached KV, which beats the
-        packing win (BatchLLM's global-prefix observation).
+        is preserved. Backfill packs further requests into the anchor's
+        forward, largest COMPUTED-token count first (FFD maximizes bucket
+        fill): cache misses contribute their full length, cache hits only
+        their suffix — hit segments attend their cached prefix KV through
+        the gathered prefix buffer (packed prefix-hit path), so hit anchors
+        are backfillable and hit candidates co-pack.
+
+        Per candidate a small cost model chooses between {co-pack, later
+        solo-suffix run}: admit only when
+        ``jct(bucket(total+suffix)) <= jct(bucket(total)) + jct(bucket(suffix))``
+        — the packed-step estimate on bucketed forward sizes beats running
+        the candidate sequentially (bucketing makes this non-trivial: a
+        candidate that tips the forward into the next bucket can lose).
+        Budgets: computed tokens <= ``pack_token_budget``; gathered prefix
+        tokens <= ``pack_prefix_budget``. The token-linear fit cannot see
+        the batched hit forward's row padding, so two shape guards back it
+        up: candidates are ordered by prefix class (same-pmax rows pad
+        least), and a candidate that would raise the batch's prefix bucket
+        beyond 2x its current class — or whose prefix dwarfs the batch's
+        computed tokens — is left for its own step.
+
+        Requests sharing a prefix root (same first hash-chain block) co-pack
+        ONLY when both sides already hit the cache (each attends its own
+        gathered copy of the shared KV). A miss sharing a root still runs
+        sequentially, so the later request hits the earlier one's freshly
+        inserted KV — that reuse beats any packing win (BatchLLM's
+        global-prefix observation).
         """
         with self.lock:
             i = self.scheduler.pick(self.queue, self.cache, now)
@@ -341,29 +423,63 @@ class PrefillOnlyEngine:
             batch = [anchor]
             ecfg = self.ecfg
             if (ecfg.max_pack_requests <= 1 or ecfg.pack_token_budget <= 0
-                    or not self.queue or self._usable_prefix(anchor) > 0):
+                    or not self.queue):
                 return batch
-            total = anchor.n_input
-            roots = {anchor.chain[0]} if anchor.chain else set()
-            cands = sorted(self.queue, key=lambda r: (-r.n_input, r.arrival,
-                                                      r.req_id))
-            for r in cands:
+            m = self.jct_model
+            buckets = ecfg.suffix_buckets
+            pref_a = self._usable_prefix(anchor)
+            total = anchor.n_input - pref_a        # computed suffix tokens
+            pref_total = pref_a
+            hit_roots = ({anchor.chain[0]: pref_a > 0} if anchor.chain
+                         else {})
+            # one cache walk per candidate (the same O(chain) walk pick()
+            # already paid this step) — suffix lengths drive both the FFD
+            # order and the budget, so they must be known up front.
+            # Order: prefix length desc FIRST, then suffix desc (FFD). The
+            # batched hit forward pads every row to the batch's max
+            # (smax, pmax), so grouping candidates of the same prefix class
+            # minimizes row padding; misses (prefix 0) group last.
+            cands = [(r, self._usable_prefix(r)) for r in self.queue]
+            cands.sort(key=lambda rp: (-rp[1],
+                                       -(rp[0].n_input - rp[1]),
+                                       rp[0].arrival, rp[0].req_id))
+            # batched-hit rows all pad to the batch's max prefix bucket, a
+            # cost the token-linear JCT fit never sees — track it and gate
+            # candidates that would blow it up for every row
+            pmax_b = _bucket(pref_a, ecfg.prefix_buckets) if pref_a else 0
+            for r, pref in cands:
                 if len(batch) >= ecfg.max_pack_requests:
                     break
-                if total + r.n_input > ecfg.pack_token_budget:
+                suffix = r.n_input - pref
+                if total + suffix > ecfg.pack_token_budget:
                     continue
+                if pref and pref_total + pref > ecfg.pack_prefix_budget:
+                    continue
+                pb = _bucket(pref, ecfg.prefix_buckets) if pref else 0
+                if pb > pmax_b:
+                    # raising pmax re-prices every row's prefix attention:
+                    # allow at most one ladder-ish step over the current
+                    # class, and never a prefix that dwarfs the batch's
+                    # computed work (attended tokens are cheap, not free)
+                    if pmax_b and pb > 2 * pmax_b:
+                        continue
+                    if pref > 4 * (total + suffix):
+                        continue
                 root = r.chain[0] if r.chain else None
-                if root is not None and root in roots:
+                if root is not None and root in hit_roots and not (
+                        hit_roots[root] and pref > 0):
                     continue
-                # cache walk LAST and only for requests that actually fit —
-                # pick() already probed the whole queue this step; don't
-                # re-walk every chain a second time for the candidate list
-                if self._usable_prefix(r) > 0:
+                pack_est = m.predict(_bucket(total + suffix, buckets))
+                seq_est = (m.predict(_bucket(total, buckets))
+                           + m.predict(_bucket(suffix, buckets)))
+                if pack_est > seq_est:
                     continue
                 batch.append(r)
-                total += r.n_input
+                total += suffix
+                pref_total += pref
+                pmax_b = max(pmax_b, pb)
                 if root is not None:
-                    roots.add(root)
+                    hit_roots.setdefault(root, pref > 0)
             for r in batch[1:]:
                 self.queue.remove(r)
             return batch
@@ -384,7 +500,8 @@ class PrefillOnlyEngine:
         # cache probe + pin under the lock; the forward itself runs outside
         # it so router/admission probes never block on compute
         with self.lock:
-            prefix_len = self._usable_prefix(r, touch=True)
+            matched = self.cache.match_blocks(r.chain, touch=True)
+            prefix_len = self._usable_prefix_len(r.n_input, matched)
             use_blocks = prefix_len // bs
             r.n_cached_at_start = prefix_len
             self.hit_tokens += prefix_len
@@ -392,6 +509,10 @@ class PrefillOnlyEngine:
             self.padded_slots += prefix_len + _bucket(
                 r.n_input - prefix_len, self.ecfg.suffix_buckets)
             keep = min(r.n_input, self.ecfg.kv_keep_tokens)
+            # chain already resident past the keep bound: the insert below
+            # would only re-slice and re-touch existing blocks — skip it
+            # (the match walk above refreshed their LRU standing)
+            resident = matched * bs >= (keep // bs) * bs
             if prefix_len:
                 self.cache.pin(r.chain, use_blocks)
                 payloads = self.cache.match_payloads(r.chain)[:use_blocks]
@@ -409,15 +530,18 @@ class PrefillOnlyEngine:
         with self.lock:
             if prefix_len:
                 self.cache.unpin(r.chain, use_blocks)
-            n_insertable = max(0, min(keep, kv_from + n_new) - kv_from)
-            n_blocks_new = n_insertable // bs
-            payloads_all = self.cache.match_payloads(r.chain)[:use_blocks]
-            for b in range(n_blocks_new):
-                k_b = new_kv["k"][:, :, b * bs:(b + 1) * bs]
-                v_b = new_kv["v"][:, :, b * bs:(b + 1) * bs]
-                payloads_all.append((k_b, v_b))
-            self.cache.insert(r.chain, kv_from + n_blocks_new * bs,
-                              now=time.perf_counter(), payloads=payloads_all)
+            if not resident:
+                n_insertable = max(0, min(keep, kv_from + n_new) - kv_from)
+                n_blocks_new = n_insertable // bs
+                payloads_all = self.cache.match_payloads(
+                    r.chain)[:use_blocks]
+                for b in range(n_blocks_new):
+                    k_b = new_kv["k"][:, :, b * bs:(b + 1) * bs]
+                    v_b = new_kv["v"][:, :, b * bs:(b + 1) * bs]
+                    payloads_all.append((k_b, v_b))
+                self.cache.insert(r.chain, kv_from + n_blocks_new * bs,
+                                  now=time.perf_counter(),
+                                  payloads=payloads_all)
         return logits
 
     def _run_fresh(self, tokens: Sequence[int], keep: int = 0):
@@ -451,24 +575,144 @@ class PrefillOnlyEngine:
         return logits, kv, n_new
 
     def _execute_packed(self, batch: List[Request]) -> jax.Array:
-        """Run N cache-miss requests as one prepacked forward.
+        """Run N requests (cache hits AND misses) as one prepacked forward.
 
-        Returns (N, V) logits — one row per request. Suffix discard is
-        per-segment, which a packed-sequence prefix budget cannot express,
-        so the forward gathers exactly each request's keep window via
-        ``kv_indices``: the stacked KV costs K kept tokens (same bound as
-        the solo path), not S, and each window is inserted under its own
-        chain.
+        Returns (N, V) logits — one row per request. Hit segments pack only
+        their SUFFIX tokens; their cached prefix KV is gathered into one
+        contiguous per-segment prefix buffer the packed attention reads
+        through position-masked segment restriction
+        (``tfm.prefill_packed_with_prefix``). All-miss batches take the
+        plain ``tfm.prefill_packed`` path unchanged.
+
+        Suffix discard is per-segment, which a packed-sequence prefix budget
+        cannot express, so the forward gathers exactly each request's keep
+        window via ``kv_indices``: the stacked KV costs K kept tokens (same
+        bound as the solo path), not S, and each window is inserted under
+        its own chain — hits extend their chain past the reused prefix, so
+        cache inserts keep the solo-path memory bound.
         """
         bs = self.ecfg.block_size
-        total = sum(r.n_input for r in batch)
-        S = _bucket(total, self.ecfg.suffix_buckets)
         N = len(batch)
-        # block-aligned keep per request (only whole blocks are insertable)
-        keeps = [(min(r.n_input, self.ecfg.kv_keep_tokens) // bs) * bs
-                 for r in batch]
-        # pad the gather length to a bucket so jit keys stay bounded
-        K = _bucket(sum(keeps), self.ecfg.suffix_buckets) if sum(keeps) else 0
+        # cache probe + pin under the lock; the forward runs outside it so
+        # router/admission probes never block on compute (solo-path rule)
+        prefs: List[Tuple[int, List, int]] = []
+        with self.lock:
+            for r in batch:
+                matched = self.cache.match_blocks(r.chain, touch=True)
+                plen = self._usable_prefix_len(r.n_input, matched)
+                r.n_cached_at_start = plen
+                payloads = []
+                if plen:
+                    self.cache.pin(r.chain, plen // bs)
+                    payloads = self.cache.match_payloads(
+                        r.chain)[:plen // bs]
+                prefs.append((plen, payloads, matched))
+                self.hit_tokens += plen
+                self.total_tokens += r.n_input
+        suffixes = [r.n_input - p for r, (p, _, _) in zip(batch, prefs)]
+        total = sum(suffixes)
+        S = _bucket(total, self.ecfg.suffix_buckets)
+        P_max = max(p for p, _, _ in prefs)
+        # per-SEGMENT prefix pad (the hit forward is batched over segments);
+        # coarse ladder: the key space is a product of ladders and batch
+        # composition shifts step to step, so pmax must quantize hard or
+        # steady state keeps compiling
+        pmax = _bucket(P_max, self.ecfg.prefix_buckets) if P_max else 0
+        # batch rows padded to a power of two for the same reason
+        Nb = 1
+        while Nb < N:
+            Nb *= 2
+        # sub-bucket smax floor: hit suffixes are typically a few tens of
+        # tokens (prefix-granularity remainder), and the batched attention's
+        # dominant einsum scales with smax — padding 34 real tokens to the
+        # 64-token forward bucket would burn ~2x there
+        smax = _bucket(max(suffixes), (32, 48) + self.ecfg.suffix_buckets)
+        # block-aligned NEW keep per request (only whole blocks are
+        # insertable; a hit's cached prefix already covers its first
+        # blocks). A chain already resident past its keep bound needs NO
+        # fresh KV at all — steady-state repeat traffic then skips both the
+        # forward's kv gather and the insert-side slicing entirely.
+        keeps = []
+        for r, (p, _, matched) in zip(batch, prefs):
+            keep_total = (min(r.n_input, self.ecfg.kv_keep_tokens)
+                          // bs) * bs
+            keeps.append(0 if matched * bs >= keep_total
+                         else max(0, keep_total - p))
+        # pad the gather length to a bucket so jit keys stay bounded; on the
+        # hit path tie it to S outright (sum(keeps) <= packed suffix tokens)
+        if not sum(keeps):
+            K = 0
+        elif pmax:
+            K = S
+        else:
+            K = _bucket(sum(keeps), self.ecfg.suffix_buckets)
+        toks = np.zeros((1, S), np.int32)
+        segs = np.full((1, S), -1, np.int32)   # -1 = padding slack
+        pos = np.zeros((1, S), np.int32)
+        # last_idx is padded to max_pack_requests so the jit cache keys only
+        # on the bucket shape, not on the batch size (duplicate rows of the
+        # last real segment's logits are computed and dropped — N x V is
+        # noise next to the forward)
+        last_idx = np.zeros((max(N, self.ecfg.max_pack_requests),), np.int32)
+        kv_idx = np.zeros((K,), np.int32)
+        seg_qidx = np.full((Nb, smax), -1, np.int32)
+        inv_idx = np.zeros((S,), np.int32)
+        # padding prefix slots get a huge position: the causal mask
+        # (suffix pos >= prefix pos) kills them
+        ppos = np.full((Nb, pmax), PAD_POS, np.int32)
+        pk_rows: List = []
+        pv_rows: List = []
+        off = cum = 0
+        for n, r in enumerate(batch):
+            plen, payloads, _ = prefs[n]
+            L = suffixes[n]
+            toks[0, off:off + L] = r.tokens[plen:]
+            segs[0, off:off + L] = n
+            # RoPE restarts at each segment's OWN prefix length
+            pos[0, off:off + L] = plen + np.arange(L)
+            last_idx[n] = off + L - 1
+            kv_idx[cum:cum + keeps[n]] = off + np.arange(keeps[n])
+            seg_qidx[n, :L] = off + np.arange(L)
+            inv_idx[off:off + L] = n * smax + np.arange(L)
+            if pmax:
+                ppos[n, :plen] = np.arange(plen)
+                pk_rows.append((plen, [p[0] for p in payloads]))
+                pv_rows.append((plen, [p[1] for p in payloads]))
+            off += L
+            cum += keeps[n]
+        last_idx[N:] = last_idx[N - 1]
+        self.padded_slots += Nb * pmax + S
+        if pmax:
+            logits, kv = self._run_packed_hit(
+                S, Nb, smax, pmax, K, toks, pos, last_idx, kv_idx,
+                seg_qidx, inv_idx, ppos, pk_rows, pv_rows)
+        else:
+            logits, kv = self._run_packed_miss(S, K, toks, segs, pos,
+                                               last_idx, kv_idx)
+        logits = logits[:N]
+        now = time.perf_counter()
+        cum = 0
+        with self.lock:
+            for n, r in enumerate(batch):
+                plen, _, _ = prefs[n]
+                if plen:
+                    self.cache.unpin(r.chain, plen // bs)
+                # keeps[n] == 0: nothing insertable (or already resident —
+                # the probe's match walk refreshed its LRU standing)
+                if kv is not None and keeps[n]:
+                    payloads_all = (self.cache.match_payloads(
+                        r.chain)[:plen // bs] if plen else [])
+                    for b in range(keeps[n] // bs):
+                        lo = cum + b * bs
+                        payloads_all.append((kv["k"][:, :, lo:lo + bs],
+                                             kv["v"][:, :, lo:lo + bs]))
+                    self.cache.insert(r.chain, plen + keeps[n], now=now,
+                                      payloads=payloads_all)
+                cum += keeps[n]
+        return logits
+
+    def _run_packed_miss(self, S: int, K: int, toks, segs, pos, last_idx,
+                         kv_idx):
         key = (S, K)
         if key not in self._packed_fns:
             self._step_compiled = True
@@ -481,47 +725,59 @@ class PrefillOnlyEngine:
                     kv_indices=kv_idx if K else None)
 
             self._packed_fns[key] = fn
-        toks = np.zeros((1, S), np.int32)
-        segs = np.full((1, S), -1, np.int32)   # -1 = padding slack
-        pos = np.zeros((1, S), np.int32)
-        # last_idx is padded to max_pack_requests so the jit cache keys only
-        # on the bucket shape, not on the batch size (duplicate rows of the
-        # last real segment's logits are computed and dropped — N x V is
-        # noise next to the forward)
-        last_idx = np.zeros((max(N, self.ecfg.max_pack_requests),), np.int32)
-        kv_idx = np.zeros((K,), np.int32)
-        off = cum = 0
-        for n, r in enumerate(batch):
-            L = r.n_input
-            toks[0, off:off + L] = r.tokens
-            segs[0, off:off + L] = n
-            pos[0, off:off + L] = np.arange(L)   # RoPE restarts per segment
-            last_idx[n] = off + L - 1
-            kv_idx[cum:cum + keeps[n]] = off + np.arange(keeps[n])
-            r.n_cached_at_start = 0
-            off += L
-            cum += keeps[n]
-        last_idx[N:] = last_idx[N - 1]
-        self.total_tokens += total
-        self.padded_slots += S
-        logits, kv = self._packed_fns[key](
+        return self._packed_fns[key](
             self.params, jnp.asarray(toks), jnp.asarray(segs),
             jnp.asarray(pos), jnp.asarray(last_idx), jnp.asarray(kv_idx))
-        logits = logits[:N]
-        if kv is not None:
-            now = time.perf_counter()
-            cum = 0
-            with self.lock:
-                for n, r in enumerate(batch):
-                    payloads = []
-                    for b in range(keeps[n] // bs):
-                        lo = cum + b * bs
-                        payloads.append((kv["k"][:, :, lo:lo + bs],
-                                         kv["v"][:, :, lo:lo + bs]))
-                    self.cache.insert(r.chain, keeps[n], now=now,
-                                      payloads=payloads)
-                    cum += keeps[n]
-        return logits
+
+    def _run_packed_hit(self, S: int, Nb: int, smax: int, pmax: int, K: int,
+                        toks, pos, last_idx, kv_idx, seg_qidx, inv_idx,
+                        ppos, pk_rows, pv_rows):
+        """Packed prefix-hit forward: assemble the pinned per-block prefix
+        payloads into the batched (L, Nb, pmax, KV, hd) buffer (row n =
+        segment n's prefix, zero-padded) and run
+        ``prefill_packed_with_prefix``."""
+        key = (S, Nb, smax, pmax, K)
+        if key not in self._packed_hit_fns:
+            self._step_compiled = True
+            cfg = self.cfg
+
+            @jax.jit
+            def fn(params, toks, pos, last_idx, pk, pv, ppos, seg_qidx,
+                   inv_idx, kv_idx):
+                return tfm.prefill_packed_with_prefix(
+                    params, cfg, toks, pos, last_idx, {"k": pk, "v": pv},
+                    ppos, seg_qidx, inv_idx,
+                    kv_indices=kv_idx if K else None)
+
+            self._packed_hit_fns[key] = fn
+
+        zero_row = jnp.zeros((self.cfg.num_layers, 1, pmax,
+                              self.cfg.num_kv_heads, self.cfg.head_dim),
+                             jnp.dtype(self.cfg.dtype))
+
+        def assemble(rows):
+            # rows: per segment (plen, per-block (L, 1, bs, KV, hd)
+            # payloads); -> the batched (L, Nb, pmax, KV, hd) buffer
+            out = []
+            for plen, parts in rows:
+                if not parts:
+                    out.append(zero_row)
+                    continue
+                buf = jnp.concatenate(parts, axis=2)
+                if plen < pmax:
+                    buf = jnp.pad(buf, ((0, 0), (0, 0), (0, pmax - plen),
+                                        (0, 0), (0, 0)))
+                out.append(buf)
+            out += [zero_row] * (Nb - len(rows))
+            return jnp.concatenate(out, axis=1)
+
+        pk = assemble(pk_rows)
+        pv = assemble(pv_rows)
+        return self._packed_hit_fns[key](
+            self.params, jnp.asarray(toks), jnp.asarray(pos),
+            jnp.asarray(last_idx), pk, pv, jnp.asarray(ppos),
+            jnp.asarray(seg_qidx), jnp.asarray(inv_idx),
+            jnp.asarray(kv_idx))
 
     def _run_suffix(self, tokens, pk, pv, prefix_len: int, keep: int):
         S = _bucket(len(tokens), self.ecfg.suffix_buckets)
@@ -555,7 +811,8 @@ class PrefillOnlyEngine:
         """Constrained single-token output: renormalize over allowed ids
         (paper §2.3 — P(Yes)/P(No) without fine-tuning)."""
         out = {"req_id": r.req_id, "latency": r.latency,
-               "n_cached": r.n_cached_at_start, "n_input": r.n_input}
+               "n_cached": r.n_cached_at_start, "n_input": r.n_input,
+               "deadline": r.deadline}
         logits = np.asarray(logits[0], np.float64)
         if r.allowed_tokens:
             sub = logits[list(r.allowed_tokens)]
@@ -574,6 +831,7 @@ class PrefillOnlyEngine:
             "hit_rate": self.hit_tokens / max(1, self.total_tokens),
             "packed_steps": self.packed_steps,
             "packed_requests": self.packed_requests,
+            "packed_hit_requests": self.packed_hit_requests,
             # fraction of paid forward slots that were padding/cache slack
             "padding_waste": 1.0 - (self.total_tokens
                                     / max(1, self.padded_slots)),

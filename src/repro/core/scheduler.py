@@ -49,20 +49,35 @@ class Request:
 
 
 class Scheduler:
-    def __init__(self, policy: str, jct_model, lam: float = 0.0):
+    def __init__(self, policy: str, jct_model, lam: float = 0.0,
+                 usable_prefix=None):
         """``lam`` (λ) is the paper's fairness knob in JCT-seconds per second
         of queueing (paper default 500 — their jct unit is ms; ours is s, the
-        ratio is what matters)."""
+        ratio is what matters).
+
+        ``usable_prefix(n_input, matched_blocks) -> tokens`` optionally maps
+        a raw cache match onto the prefix a forward would actually REUSE
+        (the engine's reuse-granularity bucketing, never the whole request)
+        so Algorithm-1 scores price requests the same way execution and the
+        shedding/routing probes do. ``None`` falls back to the raw match
+        (simulator / standalone use)."""
         assert policy in ("fifo", "srjf", "srjf_calibrated"), policy
         self.policy = policy
         self.jct_model = jct_model
         self.lam = lam
+        self.usable_prefix = usable_prefix
 
     def score(self, r: Request, cache, now: float) -> float:
         """Algorithm 1 priority of one request (lower runs sooner)."""
         if self.policy == "srjf":
             return self.jct_model.predict(r.n_input, r.n_cached_at_arrival)
-        n_cached = cache.match_len(r.chain) if cache is not None else 0
+        if cache is None:
+            n_cached = 0
+        elif self.usable_prefix is not None:
+            n_cached = self.usable_prefix(r.n_input,
+                                          cache.match_blocks(r.chain))
+        else:
+            n_cached = cache.match_len(r.chain)
         jct = self.jct_model.predict(r.n_input, n_cached)
         return jct - self.lam * (now - r.arrival)
 

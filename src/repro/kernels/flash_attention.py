@@ -23,6 +23,18 @@ intersect is skipped by the same ``pl.when`` mechanism as the causal skip,
 so cross-segment tiles also cost 0 FLOPs. Padding tokens carry a negative
 segment id, which doubles as the padded-KV mask (``kv_valid`` handles the
 unsegmented case).
+
+Prefix-aware packing (cache-HIT co-packing): optional per-token ``pos_q``/
+``pos_k`` absolute-position arrays generalize the structural causal/window
+masks. The KV side may then be the concatenation of a *gathered per-segment
+cached-prefix KV buffer* and the fresh packed KV: prefix tokens carry their
+segment's id and their absolute positions [0, prefix_len), fresh tokens carry
+positions [prefix_len, n_input) — so each packed query segment attends
+causally over its own cached prefix plus its own fresh tokens and nothing
+else. Tile skipping stays intact: the causal skip becomes a dynamic
+min/max-position range test (same pl.when mechanism), composed with the
+segment-range skip, so a query block never touches another segment's prefix
+tiles.
 """
 from __future__ import annotations
 
@@ -34,15 +46,21 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 NEG_INF = -1e30
+# padding-kv position sentinel (shared with the model-layer oracle and the
+# engine): huge, power of two (f32-exact for the tile-skip reductions), so
+# causal masks kill padded tokens and pure-padding tiles never run
+PAD_POS = 1 << 30
 
 
 def _make_kernel(bq, bk, nk, window, softcap, scale, causal, kv_valid,
-                 segmented, tile_map):
+                 segmented, positioned, tile_map):
     def kernel(*refs):
         it = iter(refs)
         q_ref, k_ref, v_ref = next(it), next(it), next(it)
         sq_ref = next(it) if segmented else None
         sk_ref = next(it) if segmented else None
+        pq_ref = next(it) if positioned else None
+        pk_ref = next(it) if positioned else None
         o_ref = next(it)
         map_ref = next(it) if tile_map else None
         m_ref, l_ref, acc_ref = next(it), next(it), next(it)
@@ -57,10 +75,26 @@ def _make_kernel(bq, bk, nk, window, softcap, scale, causal, kv_valid,
             acc_ref[...] = jnp.zeros_like(acc_ref)
 
         run = jnp.asarray(True)
-        if causal:
-            run = run & (j * bk <= i * bq + bq - 1)
-        if window > 0:
-            run = run & (j * bk + bk - 1 >= i * bq - window + 1)
+        if positioned:
+            # Per-token absolute positions (prefix-aware packing: the KV side
+            # may concatenate a gathered prefix buffer with the fresh packed
+            # tokens, so structural tile positions are meaningless). The
+            # causal/window skips become dynamic range tests over the tiles'
+            # position min/max — padding kv tokens carry a huge position so
+            # pure-padding tiles fail the causal test and never run.
+            # f32 reductions: Mosaic has no integer reduce_min/max; positions
+            # (< 2^24, plus the power-of-two pad value) are f32-exact.
+            pq = pq_ref[0].astype(jnp.float32)              # (bq,)
+            pk = pk_ref[0].astype(jnp.float32)              # (bk,)
+            if causal:
+                run = run & (jnp.min(pk) <= jnp.max(pq))
+            if window > 0:
+                run = run & (jnp.max(pk) >= jnp.min(pq) - window + 1)
+        else:
+            if causal:
+                run = run & (j * bk <= i * bq + bq - 1)
+            if window > 0:
+                run = run & (j * bk + bk - 1 >= i * bq - window + 1)
         if kv_valid is not None:
             run = run & (j * bk < kv_valid)
         if segmented:
@@ -68,9 +102,10 @@ def _make_kernel(bq, bk, nk, window, softcap, scale, causal, kv_valid,
             # real work only if the q-block's and kv-block's segment-id ranges
             # intersect AND the kv-block holds at least one real (id >= 0)
             # token. Data-dependent, but pl.when lowers it to a branch the
-            # same way as the structural causal skip.
-            sq = sq_ref[0]                                  # (bq,)
-            sk = sk_ref[0]                                  # (bk,)
+            # same way as the structural causal skip. (f32 reductions: see
+            # above — segment ids are small ints, exactly representable.)
+            sq = sq_ref[0].astype(jnp.float32)              # (bq,)
+            sk = sk_ref[0].astype(jnp.float32)              # (bk,)
             run = run & (jnp.min(sq) <= jnp.max(sk))
             run = run & (jnp.max(sq) >= jnp.min(sk))
             run = run & (jnp.max(sk) >= 0)
@@ -87,15 +122,21 @@ def _make_kernel(bq, bk, nk, window, softcap, scale, causal, kv_valid,
                                     preferred_element_type=jnp.float32)
             if softcap:
                 s = softcap * jnp.tanh(s / softcap)
-            qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
-            kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            if positioned:
+                qpos = jnp.broadcast_to(pq_ref[0][:, None], (bq, bk))
+                kpos = jnp.broadcast_to(pk_ref[0][None, :], (bq, bk))
+            else:
+                qpos = i * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+                kpos = j * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
             mask = jnp.ones((bq, bk), jnp.bool_)
             if causal:
                 mask &= qpos >= kpos
             if window > 0:
                 mask &= (qpos - kpos) < window
             if kv_valid is not None:
-                mask &= kpos < kv_valid
+                struct_k = j * bk + jax.lax.broadcasted_iota(
+                    jnp.int32, (bq, bk), 1)
+                mask &= struct_k < kv_valid
             if segmented:
                 sq = sq_ref[0]
                 sk = sk_ref[0]
@@ -128,6 +169,8 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     kv_valid: int | None = None,
                     seg_q: jax.Array | None = None,
                     seg_k: jax.Array | None = None,
+                    pos_q: jax.Array | None = None,
+                    pos_k: jax.Array | None = None,
                     block_q: int = 256, block_k: int = 256,
                     debug_tile_map: bool = False,
                     interpret: bool = True):
@@ -140,6 +183,14 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     (composed with causal/window, which use *packed* positions — valid within
     a segment because segments are contiguous). Negative ids mark padding.
 
+    ``pos_q``/``pos_k``: (B, Sq)/(B, Sk) int32 per-token ABSOLUTE positions —
+    the prefix-aware packed path, where the KV side is concat(gathered
+    per-segment prefix KV, fresh packed KV) and structural indices no longer
+    encode order. Causal/window masks (and their tile skips, now dynamic
+    min/max range tests) use these instead. Padding kv tokens should carry a
+    huge position (and segment id -1) so they are masked and their tiles
+    skipped. Requires ``seg_q``/``seg_k``.
+
     ``debug_tile_map=True`` additionally returns a (B, nq, nk) int32 map of
     tiles that executed (1) vs were skipped (0) — test/diagnostic only.
 
@@ -151,13 +202,16 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     assert Sq % bq == 0 and Sk % bk == 0, (Sq, Sk, bq, bk)
     segmented = seg_q is not None
     assert segmented == (seg_k is not None), "seg_q and seg_k come together"
+    positioned = pos_q is not None
+    assert positioned == (pos_k is not None), "pos_q and pos_k come together"
+    assert not positioned or segmented, "per-token positions require segments"
     nq, nk = Sq // bq, Sk // bk
     if scale is None:
         scale = d ** -0.5
     if kv_valid is not None and kv_valid >= Sk:
         kv_valid = None                     # no padded kv columns: no masking
     kernel = _make_kernel(bq, bk, nk, window, softcap, scale, causal,
-                          kv_valid, segmented, debug_tile_map)
+                          kv_valid, segmented, positioned, debug_tile_map)
     in_specs = [
         pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0)),
         pl.BlockSpec((1, 1, bk, d),
@@ -170,6 +224,10 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         in_specs.append(pl.BlockSpec((1, bq), lambda b, h, i, j: (b, i)))
         in_specs.append(pl.BlockSpec((1, bk), lambda b, h, i, j: (b, j)))
         args += [seg_q.astype(jnp.int32), seg_k.astype(jnp.int32)]
+    if positioned:
+        in_specs.append(pl.BlockSpec((1, bq), lambda b, h, i, j: (b, i)))
+        in_specs.append(pl.BlockSpec((1, bk), lambda b, h, i, j: (b, j)))
+        args += [pos_q.astype(jnp.int32), pos_k.astype(jnp.int32)]
     out_specs = pl.BlockSpec((1, 1, bq, d), lambda b, h, i, j: (b, h, i, 0))
     out_shape = jax.ShapeDtypeStruct((B, H, Sq, d), q.dtype)
     if debug_tile_map:

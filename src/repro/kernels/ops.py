@@ -9,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.decode_attention import decode_attention as _decode_kernel
+from repro.kernels.flash_attention import PAD_POS
 from repro.kernels.flash_attention import flash_attention as _flash_kernel
 from repro.kernels.fused_mlp import fused_mlp as _mlp_kernel
 from repro.kernels.rmsnorm import rmsnorm as _rmsnorm_kernel
@@ -77,7 +78,13 @@ def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
     "window", "softcap", "block_q", "block_k"))
 def packed_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
                            seg_ids: jax.Array, *, window: int = 0,
-                           softcap: float = 0.0, block_q: int = 256,
+                           softcap: float = 0.0,
+                           prefix_k: jax.Array | None = None,
+                           prefix_v: jax.Array | None = None,
+                           prefix_seg: jax.Array | None = None,
+                           positions: jax.Array | None = None,
+                           prefix_positions: jax.Array | None = None,
+                           block_q: int = 256,
                            block_k: int = 256) -> jax.Array:
     """Segment-restricted causal self-attention over a prepacked sequence.
 
@@ -85,25 +92,53 @@ def packed_flash_attention(q: jax.Array, k: jax.Array, v: jax.Array,
     per-token segment index of each packed request (negative = padding).
     Attention is causal *within* each segment and zero across segments;
     cross-segment tiles are skipped inside the kernel (0 FLOPs).
+
+    Prefix-aware packing (cache-HIT co-packing): ``prefix_k``/``prefix_v``
+    (B, P, KV, d) is a gathered buffer of each segment's CACHED prefix KV,
+    ``prefix_seg`` (B, P) the owning segment of each prefix token (negative =
+    padding), ``positions`` (B, S) each packed token's absolute position in
+    its own request (restarting at prefix_len per segment), and
+    ``prefix_positions`` (B, P) the prefix tokens' absolute positions. The
+    kernel attends over concat(prefix KV, fresh KV) with per-token position
+    masks; a query block skips another segment's prefix tiles the same way it
+    skips its fresh tiles.
     """
     B, Sq, H, d = q.shape
     qt = q.transpose(0, 2, 1, 3)
     kt = k.transpose(0, 2, 1, 3)
     vt = v.transpose(0, 2, 1, 3)
+    seg = seg_ids.astype(jnp.int32)
+    with_prefix = prefix_k is not None
+    if with_prefix:
+        assert prefix_v is not None and prefix_seg is not None
+        assert positions is not None and prefix_positions is not None
+        kt = jnp.concatenate([prefix_k.transpose(0, 2, 1, 3), kt], axis=2)
+        vt = jnp.concatenate([prefix_v.transpose(0, 2, 1, 3), vt], axis=2)
+    Sk = kt.shape[2]
     bq = min(block_q, Sq)
-    bk = min(block_k, Sq)
+    bk = min(block_k, Sk)
     qt = _pad_dim(qt, 2, bq)
     kt = _pad_dim(kt, 2, bk)
     vt = _pad_dim(vt, 2, bk)
     # pad segment ids with -1: padded tokens match nothing (real ids >= 0)
-    seg = seg_ids.astype(jnp.int32)
     seg_q = jnp.pad(seg, ((0, 0), (0, qt.shape[2] - Sq)),
                     constant_values=-1)
-    seg_k = jnp.pad(seg, ((0, 0), (0, kt.shape[2] - Sq)),
+    seg_kv = (jnp.concatenate([prefix_seg.astype(jnp.int32), seg], axis=1)
+              if with_prefix else seg)
+    seg_k = jnp.pad(seg_kv, ((0, 0), (0, kt.shape[2] - Sk)),
                     constant_values=-1)
+    pos_q = pos_k = None
+    if with_prefix:
+        pos = positions.astype(jnp.int32)
+        pos_q = jnp.pad(pos, ((0, 0), (0, qt.shape[2] - Sq)))
+        pos_kv = jnp.concatenate([prefix_positions.astype(jnp.int32), pos],
+                                 axis=1)
+        pos_k = jnp.pad(pos_kv, ((0, 0), (0, kt.shape[2] - Sk)),
+                        constant_values=PAD_POS)
     out = _flash_kernel(qt, kt, vt, causal=True, window=window,
                         softcap=softcap, scale=d ** -0.5,
-                        seg_q=seg_q, seg_k=seg_k, block_q=bq, block_k=bk,
+                        seg_q=seg_q, seg_k=seg_k, pos_q=pos_q, pos_k=pos_k,
+                        block_q=bq, block_k=bk,
                         interpret=not _on_tpu())
     return out[:, :, :Sq].transpose(0, 2, 1, 3)
 

@@ -78,6 +78,46 @@ def packed_flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
                       vv.astype(jnp.float32)).astype(q.dtype)
 
 
+def packed_prefix_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array,
+                                seg_q: jax.Array, seg_k: jax.Array,
+                                pos_q: jax.Array, pos_k: jax.Array, *,
+                                window: int = 0, softcap: float = 0.0,
+                                scale: float | None = None) -> jax.Array:
+    """Prefix-aware packed attention, naive softmax (ground truth).
+
+    q: (B, H, Sq, d); k/v: (B, KV, Sk, d) where the KV side is typically
+    concat(gathered per-segment prefix KV, fresh packed KV). seg_q/seg_k:
+    (B, Sq)/(B, Sk) segment ids (< 0 = pad); pos_q/pos_k: per-token absolute
+    positions. Mask = same segment AND pos_q >= pos_k (AND window).
+    """
+    B, H, Sq, d = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    group = H // KV
+    if scale is None:
+        scale = d ** -0.5
+    kk = jnp.repeat(k, group, axis=1)
+    vv = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32) * scale,
+                   kk.astype(jnp.float32))
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    pq = pos_q.astype(jnp.int32)[:, :, None]
+    pk = pos_k.astype(jnp.int32)[:, None, :]
+    mask = pq >= pk
+    if window > 0:
+        mask &= (pq - pk) < window
+    sq = seg_q.astype(jnp.int32)
+    sk = seg_k.astype(jnp.int32)
+    mask &= (sq[:, :, None] == sk[:, None, :]) & (sk[:, None, :] >= 0)
+    s = jnp.where(mask[:, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32))
+    # fully-masked rows (padding queries) produce a uniform softmax over
+    # NEG_INF logits; zero them so comparisons see a deterministic value
+    any_live = jnp.any(mask, axis=-1)[:, None, :, None]
+    return jnp.where(any_live, out, 0.0).astype(q.dtype)
+
+
 def decode_attention_ref(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                          kv_len: jax.Array, *, softcap: float = 0.0,
                          scale: float | None = None) -> jax.Array:

@@ -20,7 +20,9 @@ each instance is one mesh tile (see DESIGN.md §5 instance sizing).
 from __future__ import annotations
 
 import argparse
+import threading
 import time
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
 from typing import Dict, Optional
 
 import jax
@@ -68,6 +70,38 @@ def make_pool(arch: str, n_instances: int = 2, *, reduced: bool = True,
     return pool
 
 
+def start_metrics_server(registry, port: int = 0,
+                         host: str = "127.0.0.1") -> ThreadingHTTPServer:
+    """Plain-HTTP Prometheus scrape endpoint over a ``MetricsRegistry``.
+
+    GET /metrics returns ``registry.render_prometheus()``; anything else is
+    404. Runs in a daemon thread; ``port=0`` binds an ephemeral port (read
+    it back from ``server.server_address``). Call ``server.shutdown()`` to
+    stop.
+    """
+
+    class Handler(BaseHTTPRequestHandler):
+        def do_GET(self):                          # noqa: N802 (stdlib API)
+            if self.path.rstrip("/") not in ("", "/metrics"):
+                self.send_error(404)
+                return
+            body = registry.render_prometheus().encode()
+            self.send_response(200)
+            self.send_header("Content-Type",
+                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Length", str(len(body)))
+            self.end_headers()
+            self.wfile.write(body)
+
+        def log_message(self, *a):                 # keep stdout clean
+            pass
+
+    server = ThreadingHTTPServer((host, port), Handler)
+    threading.Thread(target=server.serve_forever, daemon=True,
+                     name="metrics-http").start()
+    return server
+
+
 def serve_trace(arch: str = "qwen1.5-0.5b",
                 trace_name: str = "post_recommendation",
                 qps: float = 5.0, n_instances: int = 2,
@@ -80,14 +114,17 @@ def serve_trace(arch: str = "qwen1.5-0.5b",
                 max_input_tokens: Optional[int] = None,
                 profile: bool = False,
                 pool: Optional[InstancePool] = None,
-                trace_kw: Optional[Dict] = None) -> Dict:
+                trace_kw: Optional[Dict] = None,
+                metrics_port: Optional[int] = None) -> Dict:
     """Replay a paper workload through the AsyncServer. Returns latency
     stats over SERVED requests plus rejection counts and a telemetry dump.
 
     ``deadline`` is seconds after each request's arrival; with
     ``admission=True`` doomed requests are rejected/shed instead of blowing
     out the tail. ``pool=None`` builds a fresh pool (pass one to reuse
-    warmed engines across runs).
+    warmed engines across runs). ``metrics_port`` starts a plain-HTTP
+    Prometheus scrape endpoint (GET /metrics) for the duration of the
+    replay; 0 picks an ephemeral port.
     """
     if pool is None:
         pool = make_pool(arch, n_instances, policy=policy, lam=lam,
@@ -101,6 +138,25 @@ def serve_trace(arch: str = "qwen1.5-0.5b",
                                    memory_model=MemoryModel(eng_cfg))
     server = AsyncServer(pool, router=get_router(router), admission=ctrl)
     server.start()
+    exporter = None
+    if metrics_port is not None:
+        exporter = start_metrics_server(server.metrics, metrics_port)
+        print(f"metrics: http://{exporter.server_address[0]}:"
+              f"{exporter.server_address[1]}/metrics")
+    try:
+        return _replay(server, arch, trace_name, qps, scale_tokens, seed,
+                       max_requests, deadline, pool, trace_kw)
+    finally:
+        # shutdown() stops serve_forever; server_close() releases the bound
+        # socket — without it a second serve_trace on the same port (the
+        # documented warmed-pool reuse pattern) dies with EADDRINUSE
+        if exporter is not None:
+            exporter.shutdown()
+            exporter.server_close()
+
+
+def _replay(server, arch, trace_name, qps, scale_tokens, seed, max_requests,
+            deadline, pool, trace_kw) -> Dict:
     trace = get_trace(trace_name, qps, scale_tokens=scale_tokens,
                       materialize_tokens=True,
                       vocab=min(512, get_config(arch).vocab_size), seed=seed,
@@ -168,13 +224,17 @@ def main():
     ap.add_argument("--scale-tokens", type=float, default=0.02)
     ap.add_argument("--max-requests", type=int, default=60)
     ap.add_argument("--dump-metrics", action="store_true")
+    ap.add_argument("--metrics-port", type=int, default=None,
+                    help="serve Prometheus text metrics on this port "
+                         "(GET /metrics) during the replay; 0 = ephemeral")
     args = ap.parse_args()
     out = serve_trace(args.arch, args.trace, qps=args.qps,
                       n_instances=args.instances, policy=args.policy,
                       lam=args.lam, scale_tokens=args.scale_tokens,
                       max_requests=args.max_requests, router=args.router,
                       deadline=args.deadline,
-                      admission=not args.no_admission, profile=args.profile)
+                      admission=not args.no_admission, profile=args.profile,
+                      metrics_port=args.metrics_port)
     for k, v in out.items():
         if k == "metrics":
             if args.dump_metrics:

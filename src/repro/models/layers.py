@@ -19,6 +19,9 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.core.hybrid_prefill import chunked_map
+# PAD_POS: padding-kv position sentinel, shared with the Pallas kernel (the
+# oracle and kernel must agree on what "huge" means for the causal skip)
+from repro.kernels.flash_attention import PAD_POS  # noqa: F401  (re-export)
 from repro.runtime.sharding import constrain, pdef
 
 NEG_INF = -1e30
@@ -69,7 +72,10 @@ def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                       softcap: float = 0.0, q_offset: int = 0,
                       q_block: int = 512, kv_block: int = 1024,
                       head_scale: Optional[float] = None,
-                      seg_ids: Optional[jax.Array] = None) -> jax.Array:
+                      seg_ids: Optional[jax.Array] = None,
+                      seg_ids_k: Optional[jax.Array] = None,
+                      pos_q: Optional[jax.Array] = None,
+                      pos_k: Optional[jax.Array] = None) -> jax.Array:
     """Flash-style attention. q: (B,Sq,H,d), k/v: (B,Skv,KV,d) -> (B,Sq,H,d).
 
     Online-softmax over KV blocks (lax.scan) x lax.map over Q blocks: the HLO
@@ -77,16 +83,30 @@ def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 
     ``seg_ids`` (B, S) int32 enables prepacked prefill: attention is
     restricted to same-segment (q, k) pairs, so N packed requests attend only
-    to themselves (negative ids mark padding). Self-attention only (Sq==Skv);
-    causal/window masks use packed positions, which agree with per-segment
-    positions because segments are contiguous.
+    to themselves (negative ids mark padding). Self-attention (Sq==Skv) with
+    packed positions, which agree with per-segment positions because segments
+    are contiguous — unless ``seg_ids_k`` is also given.
+
+    ``seg_ids_k`` (B, Skv): KV-side segment ids when the KV side differs from
+    the query side — the prefix-aware packed path, where KV is
+    concat(gathered per-segment CACHED prefix KV, fresh packed KV). Then
+    ``pos_q``/``pos_k`` (B, Sq)/(B, Skv) per-token ABSOLUTE positions replace
+    the structural causal/window positions (each query sits at
+    prefix_len + local offset; its prefix tokens at [0, prefix_len)), and the
+    causal tile skip becomes a dynamic min/max position range test, so a
+    query block never computes another segment's prefix tiles.
     """
     B, Sq, H, d = q.shape
     _, Skv, KV, _ = k.shape
     G = H // KV
     scale = head_scale if head_scale is not None else 1.0 / math.sqrt(d)
-    if seg_ids is not None:
+    if seg_ids is not None and seg_ids_k is None:
         assert Sq == Skv, "segment-restricted attention is self-attention"
+        seg_ids_k = seg_ids
+    positioned = pos_q is not None
+    assert positioned == (pos_k is not None), "pos_q and pos_k come together"
+    assert not positioned or seg_ids is not None, \
+        "per-token positions require segment ids"
 
     qb = min(q_block, Sq)
     kb = min(kv_block, Skv)
@@ -100,9 +120,15 @@ def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
     seg_q = seg_k = None
     if seg_ids is not None:
-        seg = seg_ids.astype(jnp.int32)
-        seg_q = jnp.pad(seg, ((0, 0), (0, pad_q)), constant_values=-1)
-        seg_k = jnp.pad(seg, ((0, 0), (0, pad_k)), constant_values=-1)
+        seg_q = jnp.pad(seg_ids.astype(jnp.int32), ((0, 0), (0, pad_q)),
+                        constant_values=-1)
+        seg_k = jnp.pad(seg_ids_k.astype(jnp.int32), ((0, 0), (0, pad_k)),
+                        constant_values=-1)
+    pq_full = pk_full = None
+    if positioned:
+        pq_full = jnp.pad(pos_q.astype(jnp.int32), ((0, 0), (0, pad_q)))
+        pk_full = jnp.pad(pos_k.astype(jnp.int32), ((0, 0), (0, pad_k)),
+                          constant_values=PAD_POS)
     nq, nk = q.shape[1] // qb, k.shape[1] // kb
     qg = q.reshape(B, nq, qb, KV, G, d)
     kv_len = jnp.asarray(Skv)  # mask out k-padding
@@ -112,21 +138,38 @@ def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
         qpos = q_offset + i * qb + jnp.arange(qb)
         sq_blk = (jax.lax.dynamic_slice_in_dim(seg_q, i * qb, qb, axis=1)
                   if seg_q is not None else None)
+        pq_blk = (jax.lax.dynamic_slice_in_dim(pq_full, i * qb, qb, axis=1)
+                  if positioned else None)
 
         def kv_step(carry, j):
-            k_j = jax.lax.dynamic_slice_in_dim(k, j * kb, kb, axis=1)
-            v_j = jax.lax.dynamic_slice_in_dim(v, j * kb, kb, axis=1)
             kpos = j * kb + jnp.arange(kb)
             sk_blk = (jax.lax.dynamic_slice_in_dim(seg_k, j * kb, kb, axis=1)
                       if sq_blk is not None else None)
+            pk_blk = (jax.lax.dynamic_slice_in_dim(pk_full, j * kb, kb, axis=1)
+                      if positioned else None)
 
             def compute(carry):
+                # K/V slices live INSIDE the branch: a skipped tile must not
+                # even pay the (B, kb, KV, d) copies out of the full buffer
+                # (they dominate the dead-tile cost of long gathered-prefix
+                # buffers; the id/position slices above are kb ints each)
+                k_j = jax.lax.dynamic_slice_in_dim(k, j * kb, kb, axis=1)
+                v_j = jax.lax.dynamic_slice_in_dim(v, j * kb, kb, axis=1)
                 m, l, acc = carry
                 s = jnp.einsum("bqkgd,bskd->bkgqs", q_blk,
                                k_j.astype(jnp.float32))    # (B,KV,G,qb,kb)
                 if softcap:
                     s = softcap * jnp.tanh(s / softcap)
-                if causal:
+                if positioned:
+                    pmask = jnp.ones((B, qb, kb), jnp.bool_)
+                    if causal:
+                        pmask &= pq_blk[:, :, None] >= pk_blk[:, None, :]
+                    if window > 0:
+                        pmask &= (pq_blk[:, :, None]
+                                  - pk_blk[:, None, :]) < window
+                    pmask &= (kpos < kv_len)[None, None, :]
+                    s = jnp.where(pmask[:, None, None], s, NEG_INF)
+                elif causal:
                     s = _apply_mask(s, qpos, kpos, kv_len, window)
                 else:
                     s = jnp.where((kpos < kv_len)[None, :], s, NEG_INF)
@@ -151,10 +194,18 @@ def blocked_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
             # what turns prepacked batches into sum-of-segment attention
             # cost instead of quadratic-in-packed-length.
             live = jnp.asarray(True)
-            if causal:
-                live = live & (j * kb <= qpos[-1])
-            if window > 0:
-                live = live & (j * kb + kb - 1 > qpos[0] - window)
+            if positioned:
+                # dynamic position ranges stand in for the structural causal
+                # skip; PAD_POS on padded kv keeps pure-padding tiles dead
+                if causal:
+                    live = live & (jnp.min(pk_blk) <= jnp.max(pq_blk))
+                if window > 0:
+                    live = live & (jnp.max(pk_blk) > jnp.min(pq_blk) - window)
+            else:
+                if causal:
+                    live = live & (j * kb <= qpos[-1])
+                if window > 0:
+                    live = live & (j * kb + kb - 1 > qpos[0] - window)
             live = live & (j * kb < kv_len)
             if sq_blk is not None:
                 live = live & (jnp.min(sq_blk) <= jnp.max(sk_blk))

@@ -334,6 +334,119 @@ def prefill_with_prefix(params: Dict, cfg: ModelConfig, batch: Dict,
     return logits, {"k": kvs[0], "v": kvs[1]}
 
 
+def prefill_packed_with_prefix(params: Dict, cfg: ModelConfig,
+                               tokens: jax.Array, positions: jax.Array,
+                               last_indices: jax.Array, prefix_kv: Dict,
+                               prefix_pos: jax.Array, seg_qidx: jax.Array,
+                               inv_idx: jax.Array, *,
+                               num_shards: int = 1,
+                               kv_indices: Optional[jax.Array] = None
+                               ) -> Tuple[jax.Array, Optional[Dict]]:
+    """Prepacked prefill of N SUFFIXES, each over its own cached prefix KV
+    (the packed cache-HIT path: prefix sharers / hit requests co-packed).
+
+    Hybrid layout — prepacking's win is in the token-wise (linear) layers,
+    so they run on the packed (1, S) sequence; attention runs BATCHED per
+    segment, (N, smax) queries against each segment's own gathered
+    (N, pmax) prefix KV plus its own fresh tokens, as a handful of dense
+    einsums. (A flat segment-masked formulation — see the Pallas kernel and
+    ``blocked_attention``'s positioned mode — computes q-block x
+    whole-prefix-buffer tiles: with short suffixes every q block spans many
+    segments, no prefix tile can skip, and XLA-on-CPU tile overhead
+    dominates. The batched form does exactly sum-of-segment work.)
+
+    tokens (1, S): packed suffix tokens. ``positions`` (1, S): per-token
+    RoPE positions restarting at each segment's own ``prefix_len`` (RoPE
+    sees every suffix at its true offsets — per-segment q offsets).
+    ``last_indices`` (N,): packed index of each segment's last token.
+    ``prefix_kv``: {"k","v"} (L, N, pmax, KV, hd) — segment n's cached
+    prefix KV in row n, zero-padded to pmax. ``prefix_pos`` (N, pmax):
+    absolute positions of the prefix tokens, padding = a huge value (killed
+    by the causal mask). ``seg_qidx`` (N, smax): packed index of segment
+    n's j-th suffix token, -1 = padding. ``inv_idx`` (S,): flat
+    (n * smax + slot) of each packed position (scatter-back map; slack
+    positions may point anywhere). The result matches N independent
+    ``prefill_with_prefix`` calls.
+
+    Returns (per-segment last-token logits (N, V), fresh-KV tree gathered
+    at ``kv_indices`` (K,) packed positions — the per-segment suffix keep
+    windows, which the caller slices for cache inserts at solo-path memory
+    cost). Dense/vlm/audio/moe families (same coverage as
+    ``prefill_with_prefix``).
+    """
+    dtype = jnp.dtype(cfg.dtype)
+    x = L.embed_apply(params["embed"], tokens, dtype)
+    B, S, _ = x.shape
+    N, smax = seg_qidx.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    G = H // KV
+    chunk = cfg.hybrid_chunk
+    scale = hd ** -0.5
+    window = cfg.sliding_window
+    softcap = cfg.attn_softcap
+    idx = jnp.clip(seg_qidx, 0, S - 1)             # (N, smax)
+    kvalid = seg_qidx >= 0                         # padded slots: dead keys
+    posb = positions[0][idx]                       # (N, smax) abs positions
+    ppos = prefix_pos.astype(jnp.int32)            # (N, pmax)
+    # masks are layer-invariant: build once
+    mask_p = posb[:, :, None] >= ppos[:, None, :]  # (N, smax, pmax)
+    mask_f = ((posb[:, :, None] >= posb[:, None, :])
+              & kvalid[:, None, :])                # (N, smax, smax)
+    if window > 0:
+        mask_p &= (posb[:, :, None] - ppos[:, None, :]) < window
+        mask_f &= (posb[:, :, None] - posb[:, None, :]) < window
+
+    def body(x, xs):
+        bp, pk, pv = xs
+        h = L.rms_norm(x, bp["ln1"])
+        q, k, v = L._qkv_project(bp["attn"], h, cfg, positions, chunk)
+        qb = q[0][idx].reshape(N, smax, KV, G, hd)
+        qb = qb.astype(jnp.float32) * scale
+        kb, vb = k[0][idx], v[0][idx]              # (N, smax, KV, hd)
+        s_p = jnp.einsum("nqkgd,npkd->nkgqp", qb,
+                         pk.astype(jnp.float32))   # (N,KV,G,smax,pmax)
+        s_f = jnp.einsum("nqkgd,nskd->nkgqs", qb,
+                         kb.astype(jnp.float32))   # (N,KV,G,smax,smax)
+        if softcap:
+            s_p = softcap * jnp.tanh(s_p / softcap)
+            s_f = softcap * jnp.tanh(s_f / softcap)
+        s_p = jnp.where(mask_p[:, None, None], s_p, L.NEG_INF)
+        s_f = jnp.where(mask_f[:, None, None], s_f, L.NEG_INF)
+        m = jnp.maximum(jnp.max(s_p, axis=-1), jnp.max(s_f, axis=-1))
+        p_p = jnp.exp(s_p - m[..., None])
+        p_f = jnp.exp(s_f - m[..., None])
+        l = jnp.sum(p_p, axis=-1) + jnp.sum(p_f, axis=-1)
+        o = (jnp.einsum("nkgqp,npkd->nkgqd", p_p, pv.astype(jnp.float32))
+             + jnp.einsum("nkgqs,nskd->nkgqd", p_f, vb.astype(jnp.float32)))
+        o = o / jnp.maximum(l, 1e-30)[..., None]
+        flat = o.transpose(0, 3, 1, 2, 4).reshape(N * smax, H * hd)
+        out = flat[inv_idx][None].astype(x.dtype)  # back to packed (1, S, .)
+        out = out @ bp["attn"]["wo"]
+        x = x + out
+        h = L.rms_norm(x, bp["ln2"])
+        if cfg.is_moe:
+            mo = moe_apply(bp["moe"], h, cfg, num_shards=num_shards,
+                           hybrid_chunk=chunk)
+        else:
+            mo = L.mlp_apply(bp["mlp"], h, chunk=chunk)
+        if kv_indices is not None:
+            kv = (jnp.take(k, kv_indices, axis=1).astype(dtype),
+                  jnp.take(v, kv_indices, axis=1).astype(dtype))
+        else:
+            kv = (jnp.zeros((B, 0) + k.shape[2:], dtype),
+                  jnp.zeros((B, 0) + v.shape[2:], dtype))
+        return x + mo, kv
+
+    x, kvs = jax.lax.scan(body, x, (params["blocks"], prefix_kv["k"],
+                                    prefix_kv["v"]))
+    hidden = L.rms_norm(x, params["final_norm"])
+    logits = packed_last_logits(hidden, head_weight(params, cfg),
+                                last_indices,
+                                final_softcap=cfg.final_softcap)
+    kv = None if kv_indices is None else {"k": kvs[0], "v": kvs[1]}
+    return logits, kv
+
+
 # --------------------------------------------------------------------------
 # decode (one token against a KV cache)
 # --------------------------------------------------------------------------

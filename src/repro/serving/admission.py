@@ -15,10 +15,21 @@ The in-queue half of the same policy lives in
 ``PrefillOnlyEngine.shed_expired``: requests whose deadline becomes
 unreachable AFTER admission (backlog grew, cache churned) are popped before
 the next scheduling step.
+
+Feedback loop: every admitted-with-deadline request eventually reports back
+(``record_outcome``) whether it was served or shed in-queue. A shed request
+is a request the admission predictor UNDER-estimated — it said feasible, the
+queue said otherwise. When the shed rate over a sliding window exceeds
+``shed_target``, ``deadline_slack`` is tightened (multiplied up, so the
+deadline check turns pessimistic and rejects earlier); sustained zero-shed
+windows relax it back toward the configured floor. Adjustments land in the
+metrics registry so operators can see the controller hunting.
 """
 from __future__ import annotations
 
 import dataclasses
+import threading
+from collections import deque
 from typing import Optional
 
 from repro.core.kv_policy import MemoryModel
@@ -45,17 +56,68 @@ class AdmissionController:
     multiplies the predicted completion time before comparing against the
     deadline: >1 sheds earlier (conservative), <1 gambles on the predictor
     overestimating.
+
+    ``adapt=True`` turns on the shed-rate feedback loop: callers report each
+    admitted-with-deadline request's fate via ``record_outcome(shed=...)``;
+    when the shed fraction over the last ``adapt_window`` outcomes exceeds
+    ``shed_target``, ``deadline_slack`` is multiplied by ``adapt_rate`` (up
+    to ``max_slack``), and a full window with zero sheds relaxes it by the
+    same factor (down to the configured starting slack). The window resets
+    after every adjustment so one burst is not counted twice.
     """
 
     def __init__(self, max_input_tokens: Optional[int] = None,
                  memory_model: Optional[MemoryModel] = None,
-                 chunk: int = 2048, deadline_slack: float = 1.0):
+                 chunk: int = 2048, deadline_slack: float = 1.0,
+                 adapt: bool = True, adapt_window: int = 64,
+                 shed_target: float = 0.05, adapt_rate: float = 1.25,
+                 max_slack: float = 4.0, metrics=None):
         if max_input_tokens is None and memory_model is not None:
             max_input_tokens = memory_model.max_input_length("hybrid", chunk)
         self.max_input_tokens = max_input_tokens
         self.deadline_slack = deadline_slack
         self.rejected_infeasible = 0
         self.rejected_deadline = 0
+        self.adapt = adapt
+        self.adapt_window = adapt_window
+        self.shed_target = shed_target
+        self.adapt_rate = adapt_rate
+        self.max_slack = max_slack
+        self.min_slack = deadline_slack    # relax floor = configured slack
+        self.slack_adjustments = 0
+        self.metrics = metrics
+        self._outcomes: deque = deque(maxlen=adapt_window)
+        self._outcome_lock = threading.Lock()
+
+    # ---- shed-rate feedback ----------------------------------------------
+    def record_outcome(self, shed: bool) -> None:
+        """Report the fate of one admitted-with-deadline request: served
+        (``shed=False``) or shed in-queue after admission (``shed=True`` —
+        the admission prediction under-estimated). Thread-safe: every
+        serving worker reports here."""
+        if not self.adapt:
+            return
+        with self._outcome_lock:
+            self._outcomes.append(bool(shed))
+            if len(self._outcomes) < self.adapt_window:
+                return
+            rate = sum(self._outcomes) / len(self._outcomes)
+            if rate > self.shed_target and self.deadline_slack < self.max_slack:
+                self.deadline_slack = min(
+                    self.max_slack, self.deadline_slack * self.adapt_rate)
+                self._note_adjustment("admission_slack_tightened")
+            elif rate == 0.0 and self.deadline_slack > self.min_slack:
+                self.deadline_slack = max(
+                    self.min_slack, self.deadline_slack / self.adapt_rate)
+                self._note_adjustment("admission_slack_relaxed")
+
+    def _note_adjustment(self, counter: str) -> None:
+        self.slack_adjustments += 1
+        self._outcomes.clear()     # don't react to the same burst twice
+        if self.metrics is not None:
+            self.metrics.counter(counter).inc()
+            self.metrics.gauge("admission_deadline_slack").set(
+                self.deadline_slack)
 
     def check(self, n_input: int, deadline: Optional[float], now: float,
               predicted_wait: float, predicted_jct: float,

@@ -194,3 +194,52 @@ class MetricsRegistry:
                     f"p95={s['p95']:.4f} p99={s['p99']:.4f} "
                     f"max={s['max']:.4f}")
         return "\n".join(lines)
+
+    # ---- Prometheus text exposition (0.0.4) -------------------------------
+    @staticmethod
+    def _escape_label(v: str) -> str:
+        """Label-value escaping per the exposition spec: backslash, double
+        quote, and newline (instance names are caller-supplied strings)."""
+        return (v.replace("\\", r"\\").replace('"', r'\"')
+                .replace("\n", r"\n"))
+
+    def render_prometheus(self, namespace: str = "prefillonly") -> str:
+        """Prometheus text exposition format, scrape-ready.
+
+        Counters/gauges become ``<ns>_<name>{instance="..."}``; histograms
+        become the conventional cumulative ``_bucket{le=...}`` series plus
+        ``_sum``/``_count`` — exact, because every histogram of a name
+        shares one fixed bucket table. The empty (aggregate) instance label
+        is omitted so global metrics scrape as unlabelled series.
+        """
+        with self._lock:
+            items = sorted(self._m.items())
+        by_name: Dict[Tuple[str, str], List[Tuple[str, object]]] = {}
+        for (kind, name, inst), m in items:
+            by_name.setdefault((kind, name), []).append((inst, m))
+        out: List[str] = []
+        for (kind, name), series in sorted(by_name.items()):
+            full = f"{namespace}_{name}"
+            ptype = {"counter": "counter", "gauge": "gauge",
+                     "hist": "histogram"}[kind]
+            out.append(f"# TYPE {full} {ptype}")
+            for inst, m in series:
+                esc = self._escape_label(inst)
+                lbl = f'{{instance="{esc}"}}' if inst else ""
+                if kind in ("counter", "gauge"):
+                    out.append(f"{full}{lbl} {m.value:g}")
+                    continue
+                counts, count, total, _, _ = m._snapshot()
+                cum = 0
+                for i, bound in enumerate(m.bounds):
+                    cum += counts[i]
+                    le = f'le="{bound:g}"'
+                    sep = f'{{instance="{esc}",{le}}}' if inst \
+                        else f"{{{le}}}"
+                    out.append(f"{full}_bucket{sep} {cum}")
+                sep = (f'{{instance="{esc}",le="+Inf"}}' if inst
+                       else '{le="+Inf"}')
+                out.append(f"{full}_bucket{sep} {count}")
+                out.append(f"{full}_sum{lbl} {total:g}")
+                out.append(f"{full}_count{lbl} {count}")
+        return "\n".join(out) + ("\n" if out else "")

@@ -55,6 +55,8 @@ class AsyncServer:
         self.router = router or UserHashRouter()
         self.admission = admission
         self.metrics = metrics or MetricsRegistry()
+        if admission is not None and admission.metrics is None:
+            admission.metrics = self.metrics   # feedback-loop telemetry
         self._futures: Dict[int, Future] = {}
         self._early: Dict[int, object] = {}   # results that beat registration
         self._lock = threading.Lock()
@@ -257,6 +259,9 @@ class AsyncServer:
             if eng is None or not self.pool.healthy.get(name, False):
                 return                      # failed/removed: pool re-routed
             for r in eng.shed_expired():
+                # feedback: a shed request is one admission under-estimated
+                if self.admission is not None:
+                    self.admission.record_outcome(shed=True)
                 self._reject(r.req_id, Rejected(
                     "shed", "deadline unreachable in queue",
                     req_id=r.req_id, user_id=r.user_id))
@@ -289,6 +294,9 @@ class AsyncServer:
             for rid2, res in served:
                 m.counter("requests_served", name).inc()
                 m.histogram("latency_seconds", name).observe(res["latency"])
+                if (self.admission is not None
+                        and res.get("deadline") is not None):
+                    self.admission.record_outcome(shed=False)
                 self._resolve(rid2, res)
 
     # ---- introspection ---------------------------------------------------

@@ -580,14 +580,17 @@ def test_engine_pending_and_predict_jct_track_cache(setup):
     cfg, params = setup
     eng = _engine(cfg, params, cache_capacity_tokens=4096)
     eng.jct_model.a, eng.jct_model.b = 1.0, 0.0
-    toks = list(np.random.default_rng(0).integers(0, cfg.vocab_size, 64))
+    toks = list(np.random.default_rng(0).integers(0, cfg.vocab_size, 80))
     chain = token_chain(toks, eng.ecfg.block_size)
-    assert eng.predict_jct(64, chain) == pytest.approx(64.0)
+    assert eng.predict_jct(80, chain) == pytest.approx(80.0)
     eng.submit(toks)
-    assert eng.pending_jct() == pytest.approx(64.0)
+    assert eng.pending_jct() == pytest.approx(80.0)
     eng.step()                                       # now the prefix is cached
-    assert eng.cached_prefix_len(chain) == 64
-    assert eng.predict_jct(64, chain) == pytest.approx(0.0)
+    assert eng.cached_prefix_len(chain) == 80
+    # hit-aware probe: predicts against the USABLE prefix a forward would
+    # reuse (reuse granularity 4 blocks = 64 tokens, never the whole
+    # request), not the raw 80-token match — the truthful backlog signal
+    assert eng.predict_jct(80, chain) == pytest.approx(16.0)
     assert eng.pending_jct() == pytest.approx(0.0)   # queue empty
 
 
@@ -630,3 +633,133 @@ def test_async_server_end_to_end_real_engines(setup):
         assert srv.metrics.merged_histogram("latency_seconds").count == 6
     finally:
         srv.shutdown()
+
+
+# ---- admission feedback loop ------------------------------------------------
+
+def test_admission_slack_tightens_on_shed_rate():
+    reg = MetricsRegistry()
+    ctrl = AdmissionController(deadline_slack=1.0, adapt_window=10,
+                               shed_target=0.1, adapt_rate=2.0,
+                               max_slack=4.0, metrics=reg)
+    # 8 served + 2 shed = 20% shed rate over the window -> tighten
+    for _ in range(8):
+        ctrl.record_outcome(shed=False)
+    for _ in range(2):
+        ctrl.record_outcome(shed=True)
+    assert ctrl.deadline_slack == pytest.approx(2.0)
+    assert ctrl.slack_adjustments == 1
+    assert reg.counter("admission_slack_tightened").value == 1
+    assert reg.gauge("admission_deadline_slack").value == pytest.approx(2.0)
+    # window cleared: the same burst is not double-counted
+    assert len(ctrl._outcomes) == 0
+    # a clean window relaxes back toward the configured floor (never below)
+    for _ in range(10):
+        ctrl.record_outcome(shed=False)
+    assert ctrl.deadline_slack == pytest.approx(1.0)
+    for _ in range(10):
+        ctrl.record_outcome(shed=False)
+    assert ctrl.deadline_slack == pytest.approx(1.0)   # floor holds
+    assert reg.counter("admission_slack_relaxed").value == 1
+
+
+def test_admission_slack_respects_max_and_disabled():
+    ctrl = AdmissionController(deadline_slack=3.0, adapt_window=4,
+                               shed_target=0.0, adapt_rate=10.0,
+                               max_slack=4.0)
+    for _ in range(8):
+        ctrl.record_outcome(shed=True)
+    assert ctrl.deadline_slack == pytest.approx(4.0)   # clamped at max
+    off = AdmissionController(deadline_slack=1.0, adapt=False,
+                              adapt_window=2)
+    for _ in range(10):
+        off.record_outcome(shed=True)
+    assert off.deadline_slack == 1.0                    # feedback disabled
+
+
+def test_server_feeds_shed_outcomes_back_to_admission(setup):
+    """End-to-end: a served with-deadline request reports shed=False; a
+    queued request shed by the worker reports shed=True, and enough sheds
+    in the window tighten ``deadline_slack`` (counter + gauge recorded)."""
+    cfg, params = setup
+    pool = InstancePool(lambda name: _engine(cfg, params))
+    pool.scale_to(["a"])
+    ctrl = AdmissionController(adapt_window=2, shed_target=0.0,
+                               adapt_rate=1.5)
+    srv = AsyncServer(pool, admission=ctrl)
+    assert ctrl.metrics is srv.metrics       # registry auto-attached
+    eng = pool.engines["a"]
+    srv.start()
+    try:
+        rng = np.random.default_rng(2)
+        f = srv.submit("u", rng.integers(0, cfg.vocab_size, 32).tolist(),
+                       allowed_tokens=(5, 9),
+                       deadline=time.perf_counter() + 300.0)
+        assert srv.drain(timeout=120)
+        assert not isinstance(f.result(timeout=1), Rejected)
+        assert list(ctrl._outcomes) == [False]
+        # already-expired requests enqueued behind the server's back (no
+        # admission gate) are shed in-queue and recorded as shed=True:
+        # window [served, shed] -> 50% shed rate -> tighten
+        for _ in range(2):
+            eng.submit(rng.integers(0, cfg.vocab_size, 16).tolist(),
+                       deadline=time.perf_counter() - 1.0)
+        stop = time.time() + 30
+        while ctrl.slack_adjustments == 0 and time.time() < stop:
+            time.sleep(0.01)
+        assert ctrl.slack_adjustments >= 1
+        assert ctrl.deadline_slack > 1.0
+        assert srv.metrics.counter("admission_slack_tightened").value >= 1
+        assert srv.metrics.gauge("admission_deadline_slack").value > 1.0
+    finally:
+        srv.shutdown(drain=False)
+
+
+# ---- Prometheus exposition --------------------------------------------------
+
+def test_render_prometheus_format():
+    reg = MetricsRegistry(buckets=(0.1, 1.0))
+    reg.counter("requests_served", "a").inc(3)
+    reg.counter("requests_served", "b").inc(2)
+    reg.gauge("queue_depth", "a").set(5)
+    reg.counter("requests_rejected").inc()          # global, unlabelled
+    h = reg.histogram("latency_seconds", "a")
+    h.observe(0.05)
+    h.observe(0.5)
+    h.observe(5.0)
+    txt = reg.render_prometheus()
+    assert "# TYPE prefillonly_requests_served counter" in txt
+    assert 'prefillonly_requests_served{instance="a"} 3' in txt
+    assert 'prefillonly_requests_served{instance="b"} 2' in txt
+    assert "prefillonly_requests_rejected 1" in txt  # no instance label
+    assert "# TYPE prefillonly_latency_seconds histogram" in txt
+    # cumulative buckets: 1 below 0.1, 2 below 1.0, all 3 at +Inf
+    assert 'prefillonly_latency_seconds_bucket{instance="a",le="0.1"} 1' in txt
+    assert 'prefillonly_latency_seconds_bucket{instance="a",le="1"} 2' in txt
+    assert ('prefillonly_latency_seconds_bucket{instance="a",le="+Inf"} 3'
+            in txt)
+    assert 'prefillonly_latency_seconds_count{instance="a"} 3' in txt
+    assert txt.endswith("\n")
+
+
+def test_metrics_http_endpoint():
+    import urllib.request
+    from repro.launch.serve import start_metrics_server
+    reg = MetricsRegistry()
+    reg.counter("requests_served", "a").inc(7)
+    server = start_metrics_server(reg, port=0)
+    try:
+        host, port = server.server_address
+        with urllib.request.urlopen(
+                f"http://{host}:{port}/metrics", timeout=5) as resp:
+            assert resp.status == 200
+            assert "text/plain" in resp.headers["Content-Type"]
+            body = resp.read().decode()
+        assert 'prefillonly_requests_served{instance="a"} 7' in body
+        # non-metrics paths 404
+        import urllib.error
+        with pytest.raises(urllib.error.HTTPError):
+            urllib.request.urlopen(f"http://{host}:{port}/nope", timeout=5)
+    finally:
+        server.shutdown()
+        server.server_close()   # release the socket, not just the loop
