@@ -1,0 +1,151 @@
+"""Fault-injection benchmark: retry + watchdog + brownout vs a no-retry
+baseline, on REAL reduced-config engines (ISSUE 6 acceptance artifact).
+
+Three scenarios replay the same trace through 3-instance pools:
+
+  clean        no faults injected — the healthy reference for served% / p99
+  no_retry     a deterministic schedule of all five fault kinds (step crash,
+               hang, straggler, NaN corruption, transient submit failure)
+               with ``retry_budget=0``: lost in-flight work resolves
+               ``Rejected("error")``; the JCT watchdog still trips hangs so
+               nothing blocks forever, but nothing is re-served either
+  retry        the same fault schedule with idempotent retry (budget 3),
+               the watchdog, and the brownout ladder armed — lost work is
+               transparently re-served on healthy peers
+
+The committed output (``benchmarks/results/BENCH_serving_faults.json``)
+records per-scenario served/rejected counts, retries, watchdog trips, the
+injected-fault audit, and the served-latency tail, plus a comparison block:
+under faults, retry should recover (close to) the clean scenario's served
+fraction while keeping SERVED p99 bounded — the no-retry baseline simply
+fails every faulted request.
+
+Schedules are deterministic (exact per-instance operation indices, one
+seed), so two runs on one host inject identically. ``--smoke`` shrinks the
+trace for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+import time
+
+from repro.launch.serve import serve_trace
+from repro.serving import ChaosConfig
+
+ARCH = "qwen1.5-0.5b"
+TRACE = "post_recommendation"
+INSTANCES = 3
+
+# all five fault kinds, pinned to early per-instance operation indices so
+# they fire even on the smoke-sized trace (each instance sees a handful of
+# eligible steps); the hang lands late enough on inst1 to hit a warm engine
+FAULT_SCHEDULE = (
+    ("inst0", 0, "submit_error"),
+    ("inst0", 1, "step_error"),
+    ("inst1", 1, "nan_score"),
+    ("inst2", 1, "straggler"),
+    ("inst1", 3, "hang"),
+)
+
+
+def _chaos() -> ChaosConfig:
+    return ChaosConfig(seed=0, schedule=FAULT_SCHEDULE,
+                       hang_seconds=6.0, straggler_seconds=0.25)
+
+
+def _scenario(name: str, *, chaos, retry_budget, brownout, n_requests, qps):
+    t0 = time.perf_counter()
+    out = serve_trace(
+        ARCH, TRACE, qps=qps, n_instances=INSTANCES,
+        max_requests=n_requests, scale_tokens=0.02, deadline=None,
+        profile=True,                       # warm compiles + fitted JCT
+        retry_budget=retry_budget, watchdog=True, watchdog_factor=3.0,
+        watchdog_min_deadline=1.0, brownout=brownout, chaos=chaos,
+        drain_timeout=120.0)
+    return {
+        "scenario": name,
+        "requests": out["requests"],
+        "served": out["served"],
+        "rejected": out["rejected"],
+        "reject_reasons": out["reject_reasons"],
+        "retried": out["retried"],
+        "watchdog_trips": out["watchdog_trips"],
+        "faults_injected": out.get("faults_injected", {}),
+        "p50_latency": out["p50_latency"],
+        "p99_latency": out["p99_latency"],
+        "mean_latency": out["mean_latency"],
+        "throughput_rps": out["throughput_rps"],
+        "wall_seconds": out["wall_seconds"],
+        "bench_seconds": time.perf_counter() - t0,
+    }
+
+
+def run(n_requests: int, qps: float) -> dict:
+    # jit compile caches are process-wide: whichever scenario runs first
+    # would otherwise pay every packed/suffix-shape compile in its tail
+    # latencies. A discarded full-trace warm-up pass levels the field.
+    _scenario("warmup", chaos=None, retry_budget=0, brownout=False,
+              n_requests=n_requests, qps=qps)
+    rows = [
+        _scenario("clean", chaos=None, retry_budget=3, brownout=False,
+                  n_requests=n_requests, qps=qps),
+        _scenario("no_retry", chaos=_chaos(), retry_budget=0, brownout=False,
+                  n_requests=n_requests, qps=qps),
+        _scenario("retry", chaos=_chaos(), retry_budget=3, brownout=True,
+                  n_requests=n_requests, qps=qps),
+    ]
+    by = {r["scenario"]: r for r in rows}
+    return {
+        "bench": "serving_faults",
+        "arch": ARCH,
+        "trace": TRACE,
+        "instances": INSTANCES,
+        "requests_per_scenario": n_requests,
+        "qps": qps,
+        "fault_schedule": [list(f) for f in FAULT_SCHEDULE],
+        "scenarios": rows,
+        "comparison": {
+            "served_frac_clean": by["clean"]["served"]
+            / max(1, by["clean"]["requests"]),
+            "served_frac_no_retry": by["no_retry"]["served"]
+            / max(1, by["no_retry"]["requests"]),
+            "served_frac_retry": by["retry"]["served"]
+            / max(1, by["retry"]["requests"]),
+            "p99_no_retry_over_clean": by["no_retry"]["p99_latency"]
+            / max(1e-9, by["clean"]["p99_latency"]),
+            "p99_retry_over_clean": by["retry"]["p99_latency"]
+            / max(1e-9, by["clean"]["p99_latency"]),
+        },
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI-sized run (fewer requests)")
+    ap.add_argument("--requests", type=int, default=None)
+    # below the 3-instance pool's ~3.3 rps capacity on this trace: p99 then
+    # measures service + fault recovery, not queue buildup under overload
+    # (in saturation, scenarios that REJECT work look faster, inverting the
+    # comparison)
+    ap.add_argument("--qps", type=float, default=2.5)
+    ap.add_argument("--out", default=None,
+                    help="output path (default: benchmarks/results/"
+                         "BENCH_serving_faults.json)")
+    args = ap.parse_args()
+    n = args.requests or (18 if args.smoke else 60)
+    result = run(n, args.qps)
+    result["smoke"] = bool(args.smoke)
+    out_path = pathlib.Path(args.out) if args.out else (
+        pathlib.Path(__file__).parent / "results"
+        / "BENCH_serving_faults.json")
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(result, indent=2) + "\n")
+    print(json.dumps(result["comparison"], indent=2))
+    print(f"wrote {out_path}")
+
+
+if __name__ == "__main__":
+    main()

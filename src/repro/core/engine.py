@@ -66,6 +66,7 @@ from repro.core.scheduler import Request, Scheduler
 from repro.models import transformer as tfm
 from repro.models.layers import PAD_POS
 from repro.models.model import cast_params
+from repro.runtime.fault_tolerance import NaNGuard
 
 
 def _bucket(n: int, sizes: Sequence[int]) -> int:
@@ -154,6 +155,17 @@ class PrefillOnlyEngine:
         self.packed_hit_requests = 0   # ...of which rode a cached prefix
         self.padded_slots = 0          # bucketed forward slots actually paid
         self._step_compiled = False    # step hit a fresh jit shape
+        # result validation: a forward can emit non-finite logits (bad
+        # checkpoint cast, accelerator fault) — such results are flagged
+        # "corrupt" so the serving layer quarantines them instead of
+        # delivering NaN scores; consecutive corruption advises a reload
+        # via the training-side NaNGuard policy
+        self.result_guard = NaNGuard(limit=3)
+        self.nonfinite_results = 0
+        # brownout hook (serving): when degraded, cache-HIT requests skip
+        # the batched gathered-prefix path and run the cheap solo-suffix
+        # path instead — per-step cost variance collapses under overload
+        self.degraded = False
 
     # ---- profile run (paper §3.1) ------------------------------------------
     def profile(self, lengths: Sequence[int] = (64, 128, 256, 512)) -> float:
@@ -305,6 +317,30 @@ class PrefillOnlyEngine:
     def last_step_ids(self) -> List[int]:
         return list(self._last_step_ids)
 
+    def inflight_snapshot(self) -> Tuple[List[int], float, float]:
+        """(in-flight request ids, predicted batch JCT, start timestamp) —
+        the serving watchdog's hang probe. A batch still in flight past
+        ``factor x`` the predicted JCT is provably wedged (prefill-only JCT
+        is precisely predictable), so this triple is all a watchdog needs.
+
+        A step that triggered a fresh jit compile reports EMPTY: compile
+        time is unbounded and outside the JCT model (the same reason step()
+        excludes compile steps from the fit), so "provably wedged" does not
+        hold — the deadline applies from the first warm execution of a
+        shape on."""
+        with self.lock:
+            if self._step_compiled:
+                return [], 0.0, 0.0
+            return (list(self._inflight), self._inflight_pred,
+                    self._inflight_t0)
+
+    def set_degraded(self, flag: bool) -> None:
+        """Brownout level >=2 hook: disable hit co-packing's batched
+        gathered-prefix forward (hits run the cheap solo-suffix path,
+        misses still co-pack). Takes effect at the next batch formation."""
+        with self.lock:
+            self.degraded = bool(flag)
+
     def step(self) -> Optional[int]:
         """One scheduling step: pick (Algorithm 1), form a packed batch,
         prefill, cache, score. Returns the anchor request's id."""
@@ -428,6 +464,10 @@ class PrefillOnlyEngine:
             m = self.jct_model
             buckets = ecfg.suffix_buckets
             pref_a = self._usable_prefix(anchor)
+            if self.degraded and pref_a:
+                # brownout: a hit anchor runs the cheap solo-suffix path
+                # instead of anchoring a batched gathered-prefix forward
+                return batch
             total = anchor.n_input - pref_a        # computed suffix tokens
             pref_total = pref_a
             hit_roots = ({anchor.chain[0]: pref_a > 0} if anchor.chain
@@ -450,6 +490,8 @@ class PrefillOnlyEngine:
             for r, pref in cands:
                 if len(batch) >= ecfg.max_pack_requests:
                     break
+                if self.degraded and pref:
+                    continue       # brownout: no batched hit gather
                 suffix = r.n_input - pref
                 if total + suffix > ecfg.pack_token_budget:
                     continue
@@ -814,6 +856,26 @@ class PrefillOnlyEngine:
                "n_cached": r.n_cached_at_start, "n_input": r.n_input,
                "deadline": r.deadline}
         logits = np.asarray(logits[0], np.float64)
+        # non-finite guard: NaN logits reach scoring silently (softmax of
+        # NaN is NaN, argmax of NaN is garbage) — flag the result corrupt
+        # instead of delivering it; the serving layer quarantines and
+        # retries on a peer. Constrained scoring needs every allowed logit
+        # finite (renormalization); unconstrained argmax tolerates -inf
+        # ("never this token") but not NaN or an all-non-finite row.
+        if r.allowed_tokens:
+            bad = not bool(np.isfinite(logits[list(r.allowed_tokens)]).all())
+        else:
+            bad = bool(np.isnan(logits).any()
+                       or not np.isfinite(logits).any())
+        if bad:
+            self.nonfinite_results += 1
+            self.result_guard.observe(float("nan"))
+            out["corrupt"] = "nonfinite_logits"
+            out["token"] = -1
+            if r.allowed_tokens:
+                out["scores"] = {}
+            return out
+        self.result_guard.observe(0.0)
         if r.allowed_tokens:
             sub = logits[list(r.allowed_tokens)]
             sub = np.exp(sub - sub.max())
@@ -832,6 +894,7 @@ class PrefillOnlyEngine:
             "packed_steps": self.packed_steps,
             "packed_requests": self.packed_requests,
             "packed_hit_requests": self.packed_hit_requests,
+            "nonfinite_results": self.nonfinite_results,
             # fraction of paid forward slots that were padding/cache slack
             "padding_waste": 1.0 - (self.total_tokens
                                     / max(1, self.padded_slots)),

@@ -34,10 +34,13 @@ from repro.core.engine import EngineConfig, PrefillOnlyEngine
 from repro.core.kv_policy import MemoryModel
 from repro.data.workloads import get_trace
 from repro.models.model import build
-from repro.runtime.fault_tolerance import InstancePool
+from repro.runtime.fault_tolerance import (InstancePool,
+                                           JCTDeadlineWatchdog,
+                                           PreemptionHandler)
 from repro.runtime.sharding import materialize
-from repro.serving import (AdmissionController, AsyncServer, Rejected,
-                           get_router)
+from repro.serving import (AdmissionController, AsyncServer,
+                           BrownoutController, ChaosConfig, FaultPlan,
+                           Rejected, RetryPolicy, get_router, wrap_pool)
 
 
 def make_pool(arch: str, n_instances: int = 2, *, reduced: bool = True,
@@ -115,7 +118,14 @@ def serve_trace(arch: str = "qwen1.5-0.5b",
                 profile: bool = False,
                 pool: Optional[InstancePool] = None,
                 trace_kw: Optional[Dict] = None,
-                metrics_port: Optional[int] = None) -> Dict:
+                metrics_port: Optional[int] = None,
+                retry_budget: int = 2,
+                watchdog: bool = True,
+                watchdog_factor: float = 4.0,
+                watchdog_min_deadline: float = 1.0,
+                brownout: bool = False,
+                chaos: Optional[ChaosConfig] = None,
+                drain_timeout: Optional[float] = 30.0) -> Dict:
     """Replay a paper workload through the AsyncServer. Returns latency
     stats over SERVED requests plus rejection counts and a telemetry dump.
 
@@ -125,10 +135,21 @@ def serve_trace(arch: str = "qwen1.5-0.5b",
     warmed engines across runs). ``metrics_port`` starts a plain-HTTP
     Prometheus scrape endpoint (GET /metrics) for the duration of the
     replay; 0 picks an ephemeral port.
+
+    Robustness: the JCT-deadline watchdog and idempotent retry are ON by
+    default (``watchdog=False`` / ``retry_budget=0`` disable); ``brownout``
+    arms the graceful-degradation ladder; ``chaos`` wraps the pool in the
+    seeded fault injector (``serving.chaos``). SIGTERM/SIGINT during the
+    replay stops submitting and drains in-flight work for up to
+    ``drain_timeout`` seconds instead of dying mid-batch.
     """
     if pool is None:
         pool = make_pool(arch, n_instances, policy=policy, lam=lam,
                          seed=seed, profile=profile)
+    plan = None
+    if chaos is not None:
+        plan = FaultPlan(chaos)
+        wrap_pool(pool, plan)
     ctrl = None
     if admission:
         # MIL from the engines' own model config unless given explicitly —
@@ -136,17 +157,32 @@ def serve_trace(arch: str = "qwen1.5-0.5b",
         eng_cfg = next(iter(pool.engines.values())).cfg
         ctrl = AdmissionController(max_input_tokens=max_input_tokens,
                                    memory_model=MemoryModel(eng_cfg))
-    server = AsyncServer(pool, router=get_router(router), admission=ctrl)
+    server = AsyncServer(
+        pool, router=get_router(router), admission=ctrl,
+        retry=RetryPolicy(budget=retry_budget),
+        watchdog=(JCTDeadlineWatchdog(factor=watchdog_factor,
+                                      min_deadline=watchdog_min_deadline)
+                  if watchdog else None),
+        brownout=BrownoutController() if brownout else None)
     server.start()
     exporter = None
+    # SIGTERM/SIGINT -> drain instead of dying mid-batch (satellite of the
+    # chaos-hardening PR: a preempted serve CLI must resolve every future)
+    handler = PreemptionHandler().install()
     if metrics_port is not None:
         exporter = start_metrics_server(server.metrics, metrics_port)
         print(f"metrics: http://{exporter.server_address[0]}:"
               f"{exporter.server_address[1]}/metrics")
     try:
-        return _replay(server, arch, trace_name, qps, scale_tokens, seed,
-                       max_requests, deadline, pool, trace_kw)
+        out = _replay(server, arch, trace_name, qps, scale_tokens, seed,
+                      max_requests, deadline, pool, trace_kw,
+                      stop=lambda: handler.requested,
+                      drain_timeout=drain_timeout)
+        if plan is not None:
+            out["faults_injected"] = plan.counts()
+        return out
     finally:
+        handler.uninstall()
         # shutdown() stops serve_forever; server_close() releases the bound
         # socket — without it a second serve_trace on the same port (the
         # documented warmed-pool reuse pattern) dies with EADDRINUSE
@@ -156,7 +192,8 @@ def serve_trace(arch: str = "qwen1.5-0.5b",
 
 
 def _replay(server, arch, trace_name, qps, scale_tokens, seed, max_requests,
-            deadline, pool, trace_kw) -> Dict:
+            deadline, pool, trace_kw, stop=None,
+            drain_timeout=None) -> Dict:
     trace = get_trace(trace_name, qps, scale_tokens=scale_tokens,
                       materialize_tokens=True,
                       vocab=min(512, get_config(arch).vocab_size), seed=seed,
@@ -166,16 +203,29 @@ def _replay(server, arch, trace_name, qps, scale_tokens, seed, max_requests,
 
     t0 = time.perf_counter()
     futures = []
+    preempted = False
     for r in requests:                      # open loop: real-time arrivals
-        delay = t0 + r.arrival - time.perf_counter()
-        if delay > 0:
-            time.sleep(delay)
+        # sleep to the arrival in short slices so a SIGTERM mid-gap stops
+        # the replay within ~100ms, not after the longest arrival gap
+        while True:
+            if stop is not None and stop():
+                preempted = True
+                break
+            delay = t0 + r.arrival - time.perf_counter()
+            if delay <= 0:
+                break
+            time.sleep(min(delay, 0.1))
+        if preempted:
+            break
         futures.append(server.submit(
             r.user_id, r.tokens, allowed_tokens=yes_no,
             deadline=(t0 + r.arrival + deadline) if deadline else None))
-    server.drain()
+    server.drain(timeout=drain_timeout)
     wall = time.perf_counter() - t0
-    server.shutdown()
+    # if the drain timed out, shutdown resolves the stragglers Rejected
+    # ("shutdown") — a preempted/overloaded replay still resolves every
+    # future before reporting
+    server.shutdown(drain=True, timeout=1.0 if drain_timeout else None)
 
     outcomes = [f.result() for f in futures]
     served = [o for o in outcomes if not isinstance(o, Rejected)]
@@ -194,6 +244,9 @@ def _replay(server, arch, trace_name, qps, scale_tokens, seed, max_requests,
         "served": len(served),
         "rejected": len(rejected),
         "reject_reasons": reasons,
+        "preempted": preempted,
+        "retried": server.metrics.total("requests_retried"),
+        "watchdog_trips": server.metrics.total("watchdog_trips"),
         "wall_seconds": wall,
         "throughput_rps": len(served) / wall,
         "mean_latency": float(lats.mean()),
@@ -227,14 +280,63 @@ def main():
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="serve Prometheus text metrics on this port "
                          "(GET /metrics) during the replay; 0 = ephemeral")
+    ap.add_argument("--retry-budget", type=int, default=2,
+                    help="idempotent re-submissions per lost request "
+                         "(0 disables retry)")
+    ap.add_argument("--no-watchdog", action="store_true",
+                    help="disable the JCT-deadline hang watchdog")
+    ap.add_argument("--watchdog-factor", type=float, default=4.0,
+                    help="trip when an in-flight batch exceeds this "
+                         "multiple of its predicted JCT")
+    ap.add_argument("--watchdog-min-deadline", type=float, default=1.0,
+                    help="absolute floor on the per-batch deadline, sec")
+    ap.add_argument("--brownout", action="store_true",
+                    help="arm the graceful-degradation ladder")
+    ap.add_argument("--drain-timeout", type=float, default=30.0,
+                    help="max seconds to drain on completion or SIGTERM")
+    chaos = ap.add_argument_group(
+        "chaos", "seeded fault injection (any rate > 0 wraps the pool)")
+    chaos.add_argument("--chaos-seed", type=int, default=0)
+    chaos.add_argument("--chaos-step-error", type=float, default=0.0,
+                       help="P(step crashes after the forward, results lost)")
+    chaos.add_argument("--chaos-hang", type=float, default=0.0,
+                       help="P(step hangs past the watchdog deadline)")
+    chaos.add_argument("--chaos-hang-seconds", type=float, default=1.0)
+    chaos.add_argument("--chaos-straggler", type=float, default=0.0,
+                       help="P(step dawdles below the watchdog deadline)")
+    chaos.add_argument("--chaos-straggler-seconds", type=float, default=0.1)
+    chaos.add_argument("--chaos-nan", type=float, default=0.0,
+                       help="P(step results corrupted to non-finite scores)")
+    chaos.add_argument("--chaos-submit-error", type=float, default=0.0,
+                       help="P(submit raises transiently)")
+    chaos.add_argument("--chaos-max-faults", type=int, default=None,
+                       help="total fault budget across the run")
     args = ap.parse_args()
+    chaos_cfg = None
+    if any(r > 0 for r in (args.chaos_step_error, args.chaos_hang,
+                           args.chaos_straggler, args.chaos_nan,
+                           args.chaos_submit_error)):
+        chaos_cfg = ChaosConfig(
+            seed=args.chaos_seed, step_error=args.chaos_step_error,
+            hang=args.chaos_hang, hang_seconds=args.chaos_hang_seconds,
+            straggler=args.chaos_straggler,
+            straggler_seconds=args.chaos_straggler_seconds,
+            nan_score=args.chaos_nan,
+            submit_error=args.chaos_submit_error,
+            max_faults=args.chaos_max_faults)
     out = serve_trace(args.arch, args.trace, qps=args.qps,
                       n_instances=args.instances, policy=args.policy,
                       lam=args.lam, scale_tokens=args.scale_tokens,
                       max_requests=args.max_requests, router=args.router,
                       deadline=args.deadline,
                       admission=not args.no_admission, profile=args.profile,
-                      metrics_port=args.metrics_port)
+                      metrics_port=args.metrics_port,
+                      retry_budget=args.retry_budget,
+                      watchdog=not args.no_watchdog,
+                      watchdog_factor=args.watchdog_factor,
+                      watchdog_min_deadline=args.watchdog_min_deadline,
+                      brownout=args.brownout, chaos=chaos_cfg,
+                      drain_timeout=args.drain_timeout)
     for k, v in out.items():
         if k == "metrics":
             if args.dump_metrics:

@@ -75,6 +75,59 @@ class StepWatchdog:
         return float(np.percentile(self.times, 95)) * self.factor
 
 
+class JCTDeadlineWatchdog(StepWatchdog):
+    """Serving-side hang detector over *predicted* batch JCT.
+
+    Prefill-only serving has no token-by-token progress signal — a step
+    either returns or it doesn't — but it has something better: the JCT of
+    the in-flight batch is precisely predictable (paper §6.3). A batch that
+    has run longer than ``factor x predicted JCT`` is therefore *provably*
+    wedged (hung collective, dead accelerator, runaway recompile), not
+    merely slow: hang detection becomes arithmetic, not heuristic.
+
+    ``batch_deadline(predicted)`` is the per-batch wall-clock budget:
+    ``factor x predicted``, floored by the running-p95 deadline the training
+    watchdog uses (``StepWatchdog.deadline()`` — covers a cold or degenerate
+    JCT fit, where ``predicted`` can be ~0) and by ``min_deadline``
+    (absolute floor so jitter on near-zero predictions never trips).
+
+    Callers also feed COMPLETED step durations through ``observe`` — slower-
+    than-p95 steps that still finished are stragglers worth counting, and
+    the history keeps the fallback deadline calibrated.
+    """
+
+    def __init__(self, factor: float = 4.0, min_deadline: float = 1.0,
+                 window: int = 50, min_history: int = 10,
+                 interval: float = 0.05):
+        super().__init__(window=window, factor=factor,
+                         min_history=min_history)
+        self.min_deadline = min_deadline
+        self.interval = interval     # scan period of the watchdog thread
+
+    def observe(self, seconds: float) -> bool:
+        """Like ``StepWatchdog.observe`` but a tripped sample is NOT folded
+        into the history: a step flagged as a straggler/hang is exactly the
+        outlier the p95 floor must stay calibrated against. One 6s hang in
+        a 100ms-step history would otherwise drag the fallback deadline to
+        ~18s and blind the scan to every subsequent hang."""
+        tripped = False
+        if len(self.times) >= self.min_history:
+            d = float(np.percentile(self.times, 95)) * self.factor
+            if seconds > d:
+                self.trips += 1
+                tripped = True
+        if not tripped:
+            self.times.append(seconds)
+        return tripped
+
+    def batch_deadline(self, predicted: float) -> float:
+        deadline = self.factor * max(0.0, predicted)
+        hist = self.deadline()
+        if hist is not None:
+            deadline = max(deadline, hist)
+        return max(deadline, self.min_deadline)
+
+
 class NaNGuard:
     """Counts consecutive non-finite losses; advises reload after ``limit``."""
 

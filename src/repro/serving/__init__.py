@@ -10,10 +10,17 @@ behind a router — as a first-class layer:
   admission               MIL + deadline feasibility -> typed Rejected
   metrics                 counters / gauges / fixed-bucket histograms,
                           per-instance and global, text dump
+  chaos                   seeded deterministic fault injection (step crash,
+                          hang, straggler, NaN corruption, submit failure)
+  robustness              idempotent retry (RetryPolicy), JCT-deadline
+                          watchdog, brownout ladder (BrownoutController)
 """
-from repro.serving.admission import AdmissionController, Rejected  # noqa: F401
+from repro.serving.admission import (AdmissionController,          # noqa: F401
+                                     BrownoutController, Rejected)
+from repro.serving.chaos import (ChaosConfig, ChaosEngine,         # noqa: F401
+                                 FaultPlan, InjectedFault, wrap_pool)
 from repro.serving.metrics import (Counter, Gauge, Histogram,      # noqa: F401
-                                   MetricsRegistry)
+                                   MetricsRegistry, StateGauge)
 from repro.serving.router import (LeastBacklogRouter,              # noqa: F401
                                   UserHashRouter, get_router)
-from repro.serving.server import AsyncServer                       # noqa: F401
+from repro.serving.server import AsyncServer, RetryPolicy          # noqa: F401

@@ -39,7 +39,7 @@ from repro.core.kv_policy import MemoryModel
 class Rejected:
     """Typed rejection — the resolve value of a request that was not served."""
     reason: str                 # infeasible | deadline | shed | cancelled |
-                                # shutdown | no_instances
+                                # shutdown | no_instances | error | brownout
     detail: str = ""
     req_id: Optional[int] = None
     user_id: Optional[str] = None
@@ -86,8 +86,29 @@ class AdmissionController:
         self.min_slack = deadline_slack    # relax floor = configured slack
         self.slack_adjustments = 0
         self.metrics = metrics
+        # brownout hook: a multiplier >1 applied ON TOP of deadline_slack,
+        # so overload pressure tightens the gate without fighting the
+        # shed-rate feedback loop's own slack hunting
+        self.pressure = 1.0
         self._outcomes: deque = deque(maxlen=adapt_window)
         self._outcome_lock = threading.Lock()
+
+    def set_pressure(self, pressure: float) -> None:
+        """Brownout ladder hook: scale the effective deadline slack by
+        ``pressure`` (1.0 = normal). Recorded as a gauge when metrics are
+        attached, so operators can tell brownout tightening from the
+        feedback loop's own adjustments."""
+        self.pressure = max(1.0, float(pressure))
+        if self.metrics is not None:
+            self.metrics.gauge("admission_pressure").set(self.pressure)
+
+    def shed_rate(self) -> float:
+        """Shed fraction over the current outcome window (0.0 when empty) —
+        one of the brownout controller's escalation signals."""
+        with self._outcome_lock:
+            if not self._outcomes:
+                return 0.0
+            return sum(self._outcomes) / len(self._outcomes)
 
     # ---- shed-rate feedback ----------------------------------------------
     def record_outcome(self, shed: bool) -> None:
@@ -131,7 +152,8 @@ class AdmissionController:
                 f"n_input={n_input} exceeds MIL={self.max_input_tokens}",
                 user_id=user_id, predicted_jct=predicted_jct)
         if deadline is not None:
-            eta = now + self.deadline_slack * (predicted_wait + predicted_jct)
+            eta = now + (self.deadline_slack * self.pressure
+                         * (predicted_wait + predicted_jct))
             if eta > deadline:
                 self.rejected_deadline += 1
                 return Rejected(
@@ -141,3 +163,86 @@ class AdmissionController:
                     user_id=user_id, predicted_wait=predicted_wait,
                     predicted_jct=predicted_jct)
         return None
+
+
+class BrownoutController:
+    """Graceful-degradation ladder: overload trades quality for survival.
+
+    Levels (typed, exported as the ``brownout_level`` gauge):
+
+      0  normal    everything on
+      1  tighten   admission deadline slack scaled by ``slack_factor`` —
+                   doomed-looking work is rejected earlier, the queue stops
+                   growing at the tail
+      2  degrade   hit co-packing's expensive gather paths disabled on every
+                   engine (``engine.set_degraded``) — cache hits run the
+                   cheap solo-suffix path, misses still co-pack; per-step
+                   cost variance collapses, shedding compute for latency
+                   headroom
+      3  shed      new work rejected at the door (``Rejected("brownout")``)
+                   — existing backlog drains, the pool never collapses
+
+    Signals: the pool's worst per-instance backlog in predicted-JCT seconds
+    (trustworthy *because* prefill-only JCT is predictable) and the
+    admission controller's shed rate (fraction of admitted-with-deadline
+    requests later shed in-queue — admission under-estimating means the
+    door is effectively open too wide). The shed rate maps onto the backlog
+    axis via ``shed_to_seconds`` and the max of both drives the ladder.
+
+    Hysteresis: escalation is immediate (overload hurts NOW); de-escalation
+    requires the signal below the level's *exit* threshold (strictly less
+    than its enter threshold) for ``hold`` consecutive evaluations, so the
+    ladder doesn't flap across a noisy boundary.
+    """
+
+    LEVELS = ("normal", "tighten", "degrade", "shed")
+
+    def __init__(self, enter=(2.0, 6.0, 12.0), exit=(1.0, 3.0, 6.0),
+                 hold: int = 3, slack_factor: float = 1.5,
+                 shed_to_seconds: float = 20.0):
+        assert len(enter) == len(exit) == len(self.LEVELS) - 1
+        assert all(x < e for x, e in zip(exit, enter)), \
+            "exit thresholds must sit strictly below enter thresholds"
+        self.enter = tuple(enter)
+        self.exit = tuple(exit)
+        self.hold = hold
+        self.slack_factor = slack_factor
+        self.shed_to_seconds = shed_to_seconds
+        self.level = 0
+        self.escalations = 0
+        self.deescalations = 0
+        self._calm = 0          # consecutive below-exit evaluations
+        self._lock = threading.Lock()
+
+    def signal(self, backlog_seconds: float, shed_rate: float) -> float:
+        return max(backlog_seconds, shed_rate * self.shed_to_seconds)
+
+    def evaluate(self, backlog_seconds: float,
+                 shed_rate: float = 0.0) -> int:
+        """Feed one observation; returns the (possibly new) level."""
+        s = self.signal(backlog_seconds, shed_rate)
+        with self._lock:
+            target = 0
+            for i, e in enumerate(self.enter):
+                if s >= e:
+                    target = i + 1
+            if target > self.level:
+                self.level = target
+                self.escalations += 1
+                self._calm = 0
+            elif self.level > 0 and s < self.exit[self.level - 1]:
+                self._calm += 1
+                if self._calm >= self.hold:
+                    self.level -= 1
+                    self.deescalations += 1
+                    self._calm = 0
+            else:
+                self._calm = 0
+            return self.level
+
+    def pressure(self) -> float:
+        """Admission slack multiplier for the current level."""
+        return self.slack_factor if self.level >= 1 else 1.0
+
+    def state(self) -> str:
+        return self.LEVELS[self.level]

@@ -48,6 +48,30 @@ class Gauge:
         return self._v
 
 
+class StateGauge:
+    """Typed-state gauge over a fixed set of named states (e.g. the brownout
+    ladder). Holds the state INDEX; renders the name alongside it, and in
+    Prometheus exposition emits one 0/1 series per state (label
+    ``state="..."``) so dashboards alert on a name, not a magic integer."""
+
+    def __init__(self, states: Sequence[str]):
+        self.states = tuple(states)
+        self._i = 0
+
+    def set(self, index: int) -> None:
+        self._i = int(index)
+
+    @property
+    def value(self) -> float:
+        return float(self._i)
+
+    @property
+    def state(self) -> str:
+        if 0 <= self._i < len(self.states):
+            return self.states[self._i]
+        return str(self._i)
+
+
 class Histogram:
     """Fixed-bucket histogram; ``bounds[i]`` is the inclusive upper edge of
     bucket i, with one implicit overflow bucket past the last edge."""
@@ -150,6 +174,11 @@ class MetricsRegistry:
         return self._get("hist", name, instance,
                          lambda: Histogram(self._buckets))
 
+    def state_gauge(self, name: str, states: Sequence[str],
+                    instance: str = GLOBAL) -> StateGauge:
+        return self._get("state", name, instance,
+                         lambda: StateGauge(states))
+
     # ---- aggregation -----------------------------------------------------
     def _named(self, kind: str, name: str) -> List[Tuple[str, object]]:
         with self._lock:
@@ -178,6 +207,8 @@ class MetricsRegistry:
                 lines.append(f"counter {label} {m.value:g}")
             elif kind == "gauge":
                 lines.append(f"gauge {label} {m.value:g}")
+            elif kind == "state":
+                lines.append(f"state {label} {m.value:g} ({m.state})")
             else:
                 s = m.summary()
                 lines.append(
@@ -221,13 +252,21 @@ class MetricsRegistry:
         for (kind, name), series in sorted(by_name.items()):
             full = f"{namespace}_{name}"
             ptype = {"counter": "counter", "gauge": "gauge",
-                     "hist": "histogram"}[kind]
+                     "state": "gauge", "hist": "histogram"}[kind]
             out.append(f"# TYPE {full} {ptype}")
             for inst, m in series:
                 esc = self._escape_label(inst)
                 lbl = f'{{instance="{esc}"}}' if inst else ""
                 if kind in ("counter", "gauge"):
                     out.append(f"{full}{lbl} {m.value:g}")
+                    continue
+                if kind == "state":
+                    for i, st in enumerate(m.states):
+                        stl = self._escape_label(st)
+                        sep = (f'{{instance="{esc}",state="{stl}"}}'
+                               if inst else f'{{state="{stl}"}}')
+                        out.append(f"{full}{sep} "
+                                   f"{1 if i == int(m.value) else 0}")
                     continue
                 counts, count, total, _, _ = m._snapshot()
                 cum = 0

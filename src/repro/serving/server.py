@@ -28,21 +28,104 @@ old poll-submit-step loop that interleaved them in one thread.
       peer that eventually serves it resolves the same future);
       ``scale_to(names)`` grows/shrinks the pool and its worker threads.
 
+Robustness (chaos-hardened serving)
+-----------------------------------
+Prefill-only requests are idempotent — one stateless forward, one token, no
+side effects — so work lost mid-step is safe to re-run anywhere. The server
+exploits that end to end:
+
+  retry (``RetryPolicy``)
+      a request lost to a mid-step crash, a watchdog trip, or a corrupted
+      (non-finite) score is transparently re-submitted to a healthy peer:
+      chain re-cut at the peer's block size, deadline feasibility
+      re-checked, bounded attempts with per-request exponential backoff.
+      Only when the budget or deadline is exhausted does the future resolve
+      ``Rejected("error")``. Exactly-once delivery is enforced with
+      confiscation tombstones: once a request is re-homed, a late result
+      from the original (hung, recovered) instance is dropped, never
+      double-delivered.
+
+  watchdog (``runtime.fault_tolerance.JCTDeadlineWatchdog``)
+      a maintenance thread compares every instance's in-flight batch age
+      against ``factor x`` its *predicted* JCT (plus running-p95 and
+      absolute floors). Because prefill-only JCT is precisely predictable,
+      an overdue batch is provably wedged: the instance is failed (queued
+      work re-homes) and the in-flight batch enters retry instead of
+      hanging its futures. Completed steps feed the same watchdog —
+      slower-than-deadline steps that still finished count as stragglers.
+
+  brownout (``admission.BrownoutController``)
+      backlog/shed-rate overload degrades service instead of collapsing it:
+      level 1 tightens admission slack, level 2 disables hit co-packing's
+      expensive gather paths on every engine, level 3 rejects new work
+      (``Rejected("brownout")``). The level is exported as a gauge.
+
 Telemetry lands in a ``MetricsRegistry`` (per-instance + global counters,
-queue-depth/backlog gauges, latency and step-time histograms).
+queue-depth/backlog gauges, latency and step-time histograms; see the
+README's metric table for the robustness series).
 """
 from __future__ import annotations
 
+import dataclasses
+import math
 import threading
 import time
 from concurrent.futures import Future
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.core.prefix_cache import token_chain
-from repro.runtime.fault_tolerance import InstancePool
-from repro.serving.admission import AdmissionController, Rejected
+from repro.runtime.fault_tolerance import InstancePool, JCTDeadlineWatchdog
+from repro.serving.admission import (AdmissionController, BrownoutController,
+                                     Rejected)
 from repro.serving.metrics import MetricsRegistry
 from repro.serving.router import UserHashRouter
+
+
+@dataclasses.dataclass
+class RetryPolicy:
+    """Idempotent-retry budget for work lost in flight.
+
+    ``budget`` bounds re-submissions per request (0 disables retry: lost
+    work resolves ``Rejected("error")`` immediately). ``backoff`` is the
+    base of a per-request exponential backoff slept before each re-submit
+    (attempt k sleeps ``min(backoff_cap, backoff * 2**k)``); 0 retries
+    immediately. ``tombstone_ttl`` bounds how long a confiscated request's
+    drop-late-result marker is kept when no late result ever arrives."""
+    budget: int = 2
+    backoff: float = 0.02
+    backoff_cap: float = 0.5
+    tombstone_ttl: float = 300.0
+
+
+class _Tracked:
+    """Server-side copy of a submission, kept while its future is open so a
+    lost execution can be transparently re-submitted (the engine-side
+    Request object is unreachable once a step pops it from the queue)."""
+
+    __slots__ = ("user_id", "tokens", "allowed_tokens", "deadline",
+                 "arrival", "attempts", "prior")
+
+    def __init__(self, user_id, tokens, allowed_tokens, deadline, arrival):
+        self.user_id = user_id
+        self.tokens = tokens
+        self.allowed_tokens = allowed_tokens
+        self.deadline = deadline
+        self.arrival = arrival
+        self.attempts = 0
+        self.prior: List[int] = []    # confiscated former req_ids
+
+
+def _result_ok(res: Dict) -> bool:
+    """Delivery gate: corrupted results are quarantined, never delivered.
+    Checks both the engine's own non-finite flag and the scores themselves
+    (defense in depth — corruption injected past the engine still stops
+    here)."""
+    if res.get("corrupt"):
+        return False
+    scores = res.get("scores")
+    if scores and not all(math.isfinite(v) for v in scores.values()):
+        return False
+    return True
 
 
 class AsyncServer:
@@ -50,20 +133,30 @@ class AsyncServer:
 
     def __init__(self, pool: InstancePool, router=None,
                  admission: Optional[AdmissionController] = None,
-                 metrics: Optional[MetricsRegistry] = None):
+                 metrics: Optional[MetricsRegistry] = None,
+                 retry: Optional[RetryPolicy] = None,
+                 watchdog: Optional[JCTDeadlineWatchdog] = None,
+                 brownout: Optional[BrownoutController] = None):
         self.pool = pool
         self.router = router or UserHashRouter()
         self.admission = admission
         self.metrics = metrics or MetricsRegistry()
         if admission is not None and admission.metrics is None:
             admission.metrics = self.metrics   # feedback-loop telemetry
+        self.retry = RetryPolicy() if retry is None else retry
+        self.watchdog = watchdog
+        self.brownout = brownout
         self._futures: Dict[int, Future] = {}
         self._early: Dict[int, object] = {}   # results that beat registration
+        self._tracked: Dict[int, _Tracked] = {}
+        self._moved: Dict[int, float] = {}    # confiscated rid -> when
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         self._outstanding = 0
         self._events: Dict[str, threading.Event] = {}
         self._threads: Dict[str, threading.Thread] = {}
+        self._maint_thread: Optional[threading.Thread] = None
+        self._brownout_applied = 0
         self._stop = threading.Event()
         self._accepting = False
 
@@ -72,6 +165,11 @@ class AsyncServer:
         self._accepting = True
         for name in self.pool.live_names():
             self._start_worker(name)
+        if (self.watchdog is not None or self.brownout is not None) \
+                and self._maint_thread is None:
+            self._maint_thread = threading.Thread(
+                target=self._maintenance, name="serve-watchdog", daemon=True)
+            self._maint_thread.start()
         return self
 
     def _start_worker(self, name: str) -> None:
@@ -115,16 +213,59 @@ class AsyncServer:
             ev.set()
 
     # ---- submission ------------------------------------------------------
+    def _cut_chains(self, tokens: Sequence[int],
+                    live: Dict[str, object]) -> Dict[int, tuple]:
+        """Chains are granular in the engine's block size: on a
+        heterogeneous pool, routing/admission probes and the enqueue must
+        each see the chain cut at THEIR engine's block size, or cache
+        matching (and the cache inserts keyed on the chain) silently
+        misfire."""
+        chains: Dict[int, tuple] = {}
+        for e in live.values():
+            bs = e.ecfg.block_size
+            if bs not in chains:
+                chains[bs] = token_chain(tokens, bs)
+        return chains
+
+    def _enqueue(self, live: Dict[str, object], first: str,
+                 tokens: Sequence[int], chains: Dict[int, tuple], *,
+                 user_id, allowed_tokens, deadline,
+                 arrival) -> Optional[Tuple[str, int]]:
+        """Enqueue on ``first``, falling back to each remaining live peer
+        on a (transient) submit failure. Returns (instance, req_id), or
+        None when every live instance refused the enqueue."""
+        order = [first] + [n for n in sorted(live) if n != first]
+        for name in order:
+            eng = live[name]
+            try:
+                rid = eng.submit(tokens, allowed_tokens, user_id=user_id,
+                                 now=arrival, deadline=deadline,
+                                 chain=chains[eng.ecfg.block_size])
+                return name, rid
+            except Exception:
+                self.metrics.counter("submit_failures", name).inc()
+        return None
+
     def submit(self, user_id: Optional[str], tokens: Sequence[int], *,
                allowed_tokens: Optional[Sequence[int]] = None,
                deadline: Optional[float] = None) -> "Future":
         """Non-blocking: route, admit, enqueue; resolves to a result dict or
-        a typed ``Rejected``."""
+        a typed ``Rejected``. A transient enqueue failure falls back to the
+        next-best live instance (admission was checked against the routed
+        instance — the fallback is best-effort by design: refusing outright
+        because the preferred instance hiccuped would turn a transient
+        fault into a hard rejection)."""
         fut = Future()
         fut.set_running_or_notify_cancel()
         if not self._accepting:
             fut.set_result(Rejected("shutdown", "server not accepting",
                                     user_id=user_id))
+            return fut
+        if self.brownout is not None and self.brownout.level >= 3:
+            rej = Rejected("brownout", "pool shedding load (brownout "
+                           "level 3)", user_id=user_id)
+            self._count_rejection(rej)
+            fut.set_result(rej)
             return fut
         live = {n: self.pool.engines[n] for n in self.pool.live_names()}
         if not live:
@@ -132,35 +273,41 @@ class AsyncServer:
             self._count_rejection(rej)
             fut.set_result(rej)
             return fut
-        # chains are granular in the engine's block size: on a heterogeneous
-        # pool, routing/admission probes and the enqueue must each see the
-        # chain cut at THEIR engine's block size, or cache matching (and the
-        # cache inserts keyed on the chain) silently misfire
-        chains: Dict[int, tuple] = {}
-        for e in live.values():
-            bs = e.ecfg.block_size
-            if bs not in chains:
-                chains[bs] = token_chain(tokens, bs)
-        name = self.router.route(user_id=user_id, n_input=len(tokens),
-                                 chain=next(iter(chains.values())),
-                                 instances=live, chains=chains)
-        eng = live[name]
-        chain = chains[eng.ecfg.block_size]
-        now = time.perf_counter()
+        chains = self._cut_chains(tokens, live)
+        routed = self.router.route(user_id=user_id, n_input=len(tokens),
+                                   chain=next(iter(chains.values())),
+                                   instances=live, chains=chains)
+        eng = live[routed]
+        arrival = time.perf_counter()
         if self.admission is not None:
             rej = self.admission.check(
-                len(tokens), deadline, now, eng.pending_jct(),
-                eng.predict_jct(len(tokens), chain), user_id=user_id)
+                len(tokens), deadline, arrival, eng.pending_jct(),
+                eng.predict_jct(len(tokens),
+                                chains[eng.ecfg.block_size]),
+                user_id=user_id)
             if rej is not None:
                 self._count_rejection(rej)
                 fut.set_result(rej)
                 return fut
-        rid = eng.submit(tokens, allowed_tokens, user_id=user_id,
-                         deadline=deadline, chain=chain)
+        got = self._enqueue(live, routed, tokens, chains, user_id=user_id,
+                            allowed_tokens=allowed_tokens, deadline=deadline,
+                            arrival=arrival)
+        if got is None:
+            rej = Rejected("error", "enqueue failed on every live instance",
+                           user_id=user_id)
+            self._count_rejection(rej)
+            fut.set_result(rej)
+            return fut
+        name, rid = got
         with self._lock:
             early = self._early.pop(rid, None)
             if early is None:
                 self._futures[rid] = fut
+                if self.retry is not None and self.retry.budget > 0:
+                    self._tracked[rid] = _Tracked(
+                        user_id, list(tokens),
+                        tuple(allowed_tokens) if allowed_tokens else None,
+                        deadline, arrival)
                 self._outstanding += 1
         self.metrics.counter("requests_submitted", name).inc()
         # setdefault: the worker for an instance added via pool.scale_to()
@@ -202,19 +349,219 @@ class AsyncServer:
 
     def _reject(self, rid: int, rej: Rejected) -> None:
         """Resolve an already-registered request as ``Rejected``."""
-        self._count_rejection(rej)
-        self._resolve(rid, rej)
+        if self._resolve(rid, rej) != "dropped":
+            self._count_rejection(rej)
 
-    def _resolve(self, rid: int, result) -> None:
+    def _resolve(self, rid: int, result) -> str:
+        """Resolve ``rid``'s future with ``result``.
+
+        Returns the delivery status:
+          "delivered"  the open future was resolved
+          "parked"     submit() hasn't registered the future yet — the
+                       result waits in ``_early`` and resolves at
+                       registration (counts as delivered for telemetry)
+          "dropped"    ``rid`` was confiscated for retry (crash/watchdog/
+                       quarantine) — a late result must NOT double-resolve
+                       the future its replacement now owns
+        """
         with self._lock:
+            if self._moved.pop(rid, None) is not None:
+                return "dropped"
             fut = self._futures.pop(rid, None)
             if fut is None:
                 # submit() hasn't registered the future yet — park the result
                 self._early[rid] = result
-                return
+                return "parked"
+            self._tracked.pop(rid, None)
             self._outstanding -= 1
             self._cond.notify_all()
         fut.set_result(result)
+        return "delivered"
+
+    # ---- idempotent retry ------------------------------------------------
+    def _handle_lost(self, rid: int, exclude: Optional[str],
+                     cause: str) -> None:
+        """An in-flight execution of ``rid`` was lost (mid-step crash,
+        watchdog trip, quarantined result): re-submit it to a healthy peer
+        within the retry budget, else resolve ``Rejected("error")``.
+
+        Single-owner per rid: the first caller confiscates (the future
+        moves to the replacement req_id, the old rid becomes a tombstone
+        that drops its late result); concurrent callers — the watchdog and
+        a dying worker can race on the same batch — see the rid gone and
+        return. Safe to call for rids that already resolved."""
+        with self._lock:
+            if rid in self._moved or rid not in self._futures:
+                return                  # already resolved or confiscated
+            tr = self._tracked.get(rid)
+        pol = self.retry
+        if tr is None or pol is None or pol.budget <= 0:
+            self._reject(rid, Rejected("error", cause, req_id=rid,
+                                       user_id=getattr(tr, "user_id", None)))
+            return
+        if tr.attempts >= pol.budget:
+            self._reject(rid, Rejected(
+                "error", f"retry budget exhausted after {tr.attempts} "
+                f"attempts ({cause})", req_id=rid, user_id=tr.user_id))
+            return
+        if not self._accepting:
+            self._reject(rid, Rejected("error", f"lost during shutdown "
+                                       f"({cause})", req_id=rid,
+                                       user_id=tr.user_id))
+            return
+        if pol.backoff > 0:
+            time.sleep(min(pol.backoff_cap,
+                           pol.backoff * (2 ** tr.attempts)))
+        live = {n: self.pool.engines[n] for n in self.pool.live_names()
+                if n != exclude}
+        if not live:
+            # no *peer*: fall back to the excluded instance if it is still
+            # healthy (quarantine keeps the producer alive; a transient
+            # corruption can succeed on re-run even there)
+            live = {n: self.pool.engines[n]
+                    for n in self.pool.live_names()}
+        if not live:
+            self._reject(rid, Rejected(
+                "error", f"no healthy instance for retry ({cause})",
+                req_id=rid, user_id=tr.user_id))
+            return
+        now = time.perf_counter()
+        chains = self._cut_chains(tr.tokens, live)
+        peer = self.router.route(user_id=tr.user_id,
+                                 n_input=len(tr.tokens),
+                                 chain=next(iter(chains.values())),
+                                 instances=live, chains=chains)
+        eng = live[peer]
+        if tr.deadline is not None:
+            predicted = (eng.pending_jct() + eng.predict_jct(
+                len(tr.tokens), chains[eng.ecfg.block_size]))
+            if now + predicted > tr.deadline:
+                self._reject(rid, Rejected(
+                    "error", f"deadline infeasible on retry ({cause})",
+                    req_id=rid, user_id=tr.user_id,
+                    predicted_jct=predicted))
+                return
+        got = self._enqueue(live, peer, tr.tokens, chains,
+                            user_id=tr.user_id,
+                            allowed_tokens=tr.allowed_tokens,
+                            deadline=tr.deadline, arrival=tr.arrival)
+        if got is None:
+            self._reject(rid, Rejected(
+                "error", f"retry enqueue failed on every live instance "
+                f"({cause})", req_id=rid, user_id=tr.user_id))
+            return
+        new_name, new_rid = got
+        with self._lock:
+            fut = self._futures.pop(rid, None)
+            if fut is not None:
+                self._tracked.pop(rid, None)
+                self._moved[rid] = now    # late result from the old run:
+                tr.prior.append(rid)      # drop it, never double-deliver
+                tr.attempts += 1
+                early = self._early.pop(new_rid, None)
+                if early is None:
+                    self._futures[new_rid] = fut
+                    self._tracked[new_rid] = tr
+        if fut is None:
+            # rid resolved while we were re-submitting (a late result won
+            # the race) — the replacement is a duplicate: reclaim it, and
+            # if a worker already owns it, tombstone its result instead
+            if live[new_name].cancel(new_rid) is None:
+                with self._lock:
+                    self._moved[new_rid] = now
+            return
+        self.metrics.counter("requests_retried", new_name).inc()
+        self._events.setdefault(new_name, threading.Event()).set()
+        if early is not None:            # peer served before the re-key
+            with self._lock:
+                self._outstanding -= 1
+                self._cond.notify_all()
+            fut.set_result(early)
+
+    # ---- watchdog + brownout maintenance ---------------------------------
+    def _maintenance(self) -> None:
+        interval = (self.watchdog.interval if self.watchdog is not None
+                    else 0.05)
+        while not self._stop.wait(interval):
+            if self.watchdog is not None:
+                self._watchdog_scan()
+            if self.brownout is not None:
+                self._brownout_tick()
+            self._gc_tombstones()
+
+    def _watchdog_scan(self) -> None:
+        """Trip any instance whose in-flight batch is past ``factor x`` its
+        predicted JCT: the batch is provably wedged (prefill-only JCT is
+        precisely predictable), so fail the instance — queued work re-homes
+        — and send the in-flight batch through retry instead of letting its
+        futures hang."""
+        wd = self.watchdog
+        now = time.perf_counter()
+        for name in self.pool.live_names():
+            eng = self.pool.engines.get(name)
+            snap = getattr(eng, "inflight_snapshot", None)
+            if eng is None or snap is None:
+                continue
+            try:
+                ids, pred, t0 = snap()
+            except Exception:
+                continue
+            if not ids:
+                continue
+            elapsed = now - t0
+            deadline = wd.batch_deadline(pred)
+            if elapsed <= deadline:
+                continue
+            wd.trips += 1
+            self.metrics.counter("watchdog_trips", name).inc()
+            self.mark_failed(name)
+            for rid in ids:
+                self._handle_lost(rid, exclude=name,
+                                  cause=f"watchdog trip: batch "
+                                        f"{elapsed:.2f}s past its "
+                                        f"{deadline:.2f}s JCT deadline")
+
+    def _brownout_tick(self) -> None:
+        backlog = 0.0
+        for name in self.pool.live_names():
+            eng = self.pool.engines.get(name)
+            if eng is None:
+                continue
+            try:
+                backlog = max(backlog, eng.pending_jct())
+            except Exception:
+                continue
+        shed = (self.admission.shed_rate()
+                if self.admission is not None else 0.0)
+        self._apply_brownout(self.brownout.evaluate(backlog, shed))
+
+    def _apply_brownout(self, level: int) -> None:
+        if level == self._brownout_applied:
+            return
+        prev, self._brownout_applied = self._brownout_applied, level
+        m = self.metrics
+        m.gauge("brownout_level").set(level)
+        m.state_gauge("brownout_state", BrownoutController.LEVELS).set(level)
+        m.counter("brownout_escalations" if level > prev
+                  else "brownout_deescalations").inc()
+        if self.admission is not None:
+            self.admission.set_pressure(self.brownout.pressure())
+        degraded = level >= 2
+        for name in self.pool.live_names():
+            set_deg = getattr(self.pool.engines.get(name),
+                              "set_degraded", None)
+            if set_deg is not None:
+                set_deg(degraded)
+
+    def _gc_tombstones(self) -> None:
+        """Drop confiscation tombstones whose late result never arrived
+        (the crashed worker died before harvesting) — bounds the set."""
+        ttl = self.retry.tombstone_ttl if self.retry is not None else 300.0
+        cutoff = time.perf_counter() - ttl
+        with self._lock:
+            stale = [rid for rid, t in self._moved.items() if t < cutoff]
+            for rid in stale:
+                del self._moved[rid]
 
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Block until every admitted request has resolved."""
@@ -247,6 +594,8 @@ class AsyncServer:
         self._wake_all()
         for t in self._threads.values():
             t.join(timeout=5.0)
+        if self._maint_thread is not None:
+            self._maint_thread.join(timeout=5.0)
 
     # ---- worker loop -----------------------------------------------------
     def _worker(self, name: str) -> None:
@@ -257,7 +606,17 @@ class AsyncServer:
             # behind a reused instance name while we were mid-step
             eng = self.pool.engines.get(name)
             if eng is None or not self.pool.healthy.get(name, False):
-                return                      # failed/removed: pool re-routed
+                # failed/removed: park instead of exiting. If the instance
+                # is resurrected (scale_to remove + re-add), this thread
+                # resumes as its worker — exiting here would race
+                # _start_worker's is_alive() check and leave a revived
+                # instance with no worker. A parked thread costs one idle
+                # poll and exits at shutdown.
+                if self._threads.get(name) is not threading.current_thread():
+                    return                  # superseded by a newer worker
+                ev.wait(timeout=self.IDLE_WAIT)
+                ev.clear()
+                continue
             for r in eng.shed_expired():
                 # feedback: a shed request is one admission under-estimated
                 if self.admission is not None:
@@ -269,41 +628,81 @@ class AsyncServer:
             try:
                 rid = eng.step()
             except Exception:
-                # a dying worker must not strand futures: the mid-step batch
-                # resolves Rejected, the instance is failed so queued work
-                # requeues to peers (or resolves Rejected itself)
-                self.metrics.counter("engine_errors", name).inc()
-                for lost in list(getattr(eng, "_inflight", [])):
-                    self._reject(lost, Rejected(
-                        "error", "instance failed mid-step", req_id=lost))
+                # a dying worker must not strand futures: fail the instance
+                # FIRST (queued work re-homes to peers while they exclude
+                # it), then send the mid-step batch through idempotent
+                # retry — it resolves Rejected("error") only once the
+                # budget, deadline, or pool is exhausted
+                m.counter("engine_errors", name).inc()
+                lost = list(getattr(eng, "_inflight", []))
                 self.mark_failed(name)
-                return
+                for rid2 in lost:
+                    self._handle_lost(rid2, exclude=name,
+                                      cause="instance crashed mid-step")
+                continue                    # park above until resurrected
             if rid is None:
                 ev.wait(timeout=self.IDLE_WAIT)
                 ev.clear()
                 continue
-            m.histogram("step_seconds", name).observe(
-                time.perf_counter() - t0)
+            step_s = time.perf_counter() - t0
+            m.histogram("step_seconds", name).observe(step_s)
+            # compile steps are excluded from the watchdog history for the
+            # same reason the engine excludes them from the JCT fit: a
+            # multi-second jit compile is neither a straggler nor a sample
+            # of normal step time, and one of them would drag the p95
+            # fallback deadline past real hangs
+            if (self.watchdog is not None
+                    and not getattr(eng, "_step_compiled", False)
+                    and self.watchdog.observe(step_s)):
+                # finished, but past the p95 deadline: a straggler signal
+                # worth counting even though nothing needed recovery
+                m.counter("straggler_steps", name).inc()
             with eng.lock:
-                # pop: the future is the delivery channel under the server;
-                # leaving results behind would grow memory with every request
-                served = [(i, eng.results.pop(i)) for i in eng.last_step_ids]
+                # pop the future's delivery payload; default None — a result
+                # can be legitimately absent (request cancelled or
+                # confiscated between step completion and harvest), and a
+                # KeyError here would misclassify the ENGINE as failed
+                served = [(i, eng.results.pop(i, None))
+                          for i in eng.last_step_ids]
                 depth = len(eng.queue)
             m.gauge("queue_depth", name).set(depth)
             m.gauge("backlog_seconds", name).set(eng.pending_jct())
             for rid2, res in served:
+                if res is None:
+                    continue
+                if not _result_ok(res):
+                    # non-finite score: quarantine — never deliver NaN — and
+                    # re-run on a peer (the forward is idempotent; transient
+                    # corruption re-runs clean, persistent corruption
+                    # exhausts the budget into Rejected("error"))
+                    m.counter("results_quarantined", name).inc()
+                    self._handle_lost(
+                        rid2, exclude=name,
+                        cause=f"non-finite score quarantined "
+                              f"({res.get('corrupt') or 'nan in scores'})")
+                    continue
+                status = self._resolve(rid2, res)
+                if status == "dropped":
+                    # this batch was confiscated (watchdog trip) while the
+                    # step dawdled — its replacement owns the future now
+                    m.counter("late_results_dropped", name).inc()
+                    continue
                 m.counter("requests_served", name).inc()
                 m.histogram("latency_seconds", name).observe(res["latency"])
                 if (self.admission is not None
                         and res.get("deadline") is not None):
                     self.admission.record_outcome(shed=False)
-                self._resolve(rid2, res)
 
     # ---- introspection ---------------------------------------------------
     def stats(self) -> Dict:
         return {
             "served": self.metrics.total("requests_served"),
             "rejected": self.metrics.total("requests_rejected"),
+            "retried": self.metrics.total("requests_retried"),
+            "watchdog_trips": self.metrics.total("watchdog_trips"),
+            "quarantined": self.metrics.total("results_quarantined"),
+            "brownout_level": (self.brownout.level
+                               if self.brownout is not None else 0),
             "latency": self.metrics.merged_histogram(
                 "latency_seconds").summary(),
             "per_instance": {n: self.pool.engines[n].stats()

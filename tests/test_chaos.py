@@ -1,0 +1,617 @@
+"""Chaos-hardened serving: seeded fault injection, JCT-deadline watchdog,
+idempotent retry, brownout ladder, and the exactly-once soak.
+
+The invariants under test (ISSUE 6 acceptance):
+  * every submitted future resolves EXACTLY once, under any seeded schedule
+    of step crashes, hangs, stragglers, NaN corruption, and submit failures
+  * no future hangs past the watchdog deadline (bounded drain)
+  * >= 90% of retry-eligible requests resolve with a SERVED result
+  * late results from confiscated (watchdog-tripped) batches are dropped,
+    never double-delivered
+"""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.scheduler import Request
+from repro.runtime.fault_tolerance import (InstancePool, JCTDeadlineWatchdog,
+                                           NaNGuard)
+from repro.serving import (AdmissionController, AsyncServer,
+                           BrownoutController, ChaosConfig, FaultPlan,
+                           Rejected, RetryPolicy, wrap_pool)
+from repro.serving.server import _Tracked  # noqa: F401  (import sanity)
+
+
+# ---- fakes -------------------------------------------------------------------
+
+class FakeServingEngine:
+    """Protocol double with the full robustness surface: in-flight
+    accounting (``_inflight``/``inflight_snapshot``), finite scores, and the
+    brownout ``set_degraded`` hook. step() sleeps sec_per_token per token."""
+
+    class _ECfg:
+        block_size = 16
+
+    ecfg = _ECfg()
+
+    def __init__(self, name, sec_per_token=2e-4):
+        self.name = name
+        self.lock = threading.RLock()
+        self.queue = []
+        self.results = {}
+        self._last = []
+        self.a = sec_per_token
+        self.steps = 0
+        self._inflight = []
+        self._inflight_pred = 0.0
+        self._inflight_t0 = 0.0
+        self.degraded = False
+
+    def submit(self, tokens, allowed_tokens=None, user_id=None, now=None,
+               deadline=None, chain=None):
+        r = Request(n_input=len(tokens), arrival=time.perf_counter(),
+                    chain=chain or (), tokens=list(tokens), user_id=user_id,
+                    allowed_tokens=tuple(allowed_tokens)
+                    if allowed_tokens else None, deadline=deadline)
+        with self.lock:
+            self.queue.append(r)
+        return r.req_id
+
+    def cancel(self, rid):
+        with self.lock:
+            for i, r in enumerate(self.queue):
+                if r.req_id == rid:
+                    return self.queue.pop(i)
+        return None
+
+    def shed_expired(self, now=None):
+        now = time.perf_counter() if now is None else now
+        shed = []
+        with self.lock:
+            keep = []
+            for r in self.queue:
+                doomed = (r.deadline is not None
+                          and now + self.a * r.n_input > r.deadline)
+                (shed if doomed else keep).append(r)
+            self.queue[:] = keep
+        return shed
+
+    def pending_jct(self, now=None):
+        with self.lock:
+            return sum(self.a * r.n_input for r in self.queue)
+
+    def predict_jct(self, n, chain=()):
+        return self.a * n
+
+    def cached_prefix_len(self, chain):
+        return 0
+
+    def inflight_snapshot(self):
+        with self.lock:
+            return (list(self._inflight), self._inflight_pred,
+                    self._inflight_t0)
+
+    def set_degraded(self, flag):
+        self.degraded = bool(flag)
+
+    def step(self):
+        with self.lock:
+            if not self.queue:
+                return None
+            r = self.queue.pop(0)
+            self._inflight = [r.req_id]
+            self._inflight_pred = self.a * r.n_input
+            self._inflight_t0 = time.perf_counter()
+        time.sleep(self.a * r.n_input)
+        r.finish_time = time.perf_counter()
+        with self.lock:
+            res = {"req_id": r.req_id, "latency": r.latency, "n_cached": 0,
+                   "n_input": r.n_input, "deadline": r.deadline, "token": 5}
+            if r.allowed_tokens:
+                res["scores"] = {int(t): 1.0 / len(r.allowed_tokens)
+                                 for t in r.allowed_tokens}
+            self.results[r.req_id] = res
+            self._last = [r.req_id]
+            self._inflight = []
+            self._inflight_pred = 0.0
+            self.steps += 1
+        return r.req_id
+
+    @property
+    def last_step_ids(self):
+        return list(self._last)
+
+    def stats(self):
+        return {"steps": self.steps}
+
+
+class FirstRouter:
+    """Deterministic: always the alphabetically-first live instance — makes
+    'which instance got the request / which peer got the retry' exact."""
+
+    def route(self, user_id=None, n_input=0, chain=(), instances=None,
+              chains=None):
+        return sorted(instances)[0]
+
+
+def _pool(n=2, plan=None, cls=FakeServingEngine, **kw):
+    pool = InstancePool(lambda name: cls(name, **kw))
+    pool.scale_to([f"i{k}" for k in range(n)])
+    if plan is not None:
+        wrap_pool(pool, plan)
+    return pool
+
+
+def _server(pool, retry=None, watchdog=None, brownout=None, admission=None,
+            router=None):
+    return AsyncServer(pool, router=router or FirstRouter(),
+                       admission=admission,
+                       retry=retry if retry is not None
+                       else RetryPolicy(budget=2, backoff=0.0),
+                       watchdog=watchdog, brownout=brownout).start()
+
+
+def _count_resolutions(futs):
+    """Attach done-callbacks; returns a dict rid->count updated as futures
+    resolve (exactly-once means every count lands at exactly 1)."""
+    counts = {}
+    lock = threading.Lock()
+    for i, f in enumerate(futs):
+        def cb(fut, i=i):
+            with lock:
+                counts[i] = counts.get(i, 0) + 1
+        counts.setdefault(i, 0)
+        f.add_done_callback(cb)
+    return counts
+
+
+# ---- fault plan --------------------------------------------------------------
+
+def test_fault_plan_deterministic_across_instances_and_runs():
+    cfg = ChaosConfig(seed=7, step_error=0.1, hang=0.1, nan_score=0.1,
+                      straggler=0.1)
+    seq1 = [FaultPlan(cfg).draw("a", "step") for _ in range(1)]  # noqa: F841
+    p1, p2 = FaultPlan(cfg), FaultPlan(cfg)
+    s1 = [p1.draw("a", "step") for _ in range(200)]
+    s2 = [p2.draw("a", "step") for _ in range(200)]
+    assert s1 == s2                          # replayable
+    assert any(s1)                           # something actually fires
+    # per-instance streams are independent but each deterministic
+    assert [p1.draw("b", "step") for _ in range(50)] == \
+           [p2.draw("b", "step") for _ in range(50)]
+
+
+def test_fault_plan_schedule_fires_at_exact_op_index():
+    cfg = ChaosConfig(schedule=[("a", 2, "hang"), ("a", 0, "submit_error")])
+    p = FaultPlan(cfg)
+    assert p.draw("a", "submit") == "submit_error"
+    assert [p.draw("a", "step") for _ in range(4)] == \
+           [None, None, "hang", None]
+    assert p.counts() == {"submit_error": 1, "hang": 1}
+
+
+def test_fault_plan_max_faults_bounds_total():
+    p = FaultPlan(ChaosConfig(step_error=1.0, max_faults=2))
+    kinds = [p.draw("a", "step") for _ in range(5)]
+    assert kinds == ["step_error", "step_error", None, None, None]
+
+
+def test_fault_plan_rejects_unknown_schedule_kind():
+    with pytest.raises(AssertionError):
+        ChaosConfig(schedule=[("a", 0, "meteor_strike")])
+
+
+# ---- watchdog unit -----------------------------------------------------------
+
+def test_jct_deadline_watchdog_floors():
+    wd = JCTDeadlineWatchdog(factor=4.0, min_deadline=0.5)
+    assert wd.batch_deadline(1.0) == pytest.approx(4.0)
+    assert wd.batch_deadline(0.0) == pytest.approx(0.5)   # absolute floor
+    for _ in range(20):
+        wd.observe(0.2)
+    # running-p95 floor covers a cold/degenerate JCT fit (predicted ~0)
+    assert wd.batch_deadline(0.0) == pytest.approx(0.8)
+    assert wd.batch_deadline(1.0) == pytest.approx(4.0)
+
+
+# ---- retry paths -------------------------------------------------------------
+
+def test_step_crash_retries_on_peer_and_serves():
+    plan = FaultPlan(ChaosConfig(schedule=[("i0", 0, "step_error")]))
+    pool = _pool(2, plan)
+    srv = _server(pool)
+    fut = srv.submit("u", list(range(40)), allowed_tokens=(5, 9))
+    res = fut.result(timeout=10)
+    assert not isinstance(res, Rejected)     # transparently re-served
+    assert srv.metrics.total("requests_retried") == 1
+    assert srv.metrics.total("engine_errors") == 1
+    assert pool.healthy["i0"] is False and pool.healthy["i1"] is True
+    srv.shutdown(drain=True, timeout=5)
+
+
+def test_retry_budget_exhausted_resolves_rejected_error():
+    # both instances crash their first step: attempt 0 dies on i0, the
+    # retry dies on i1, and with no live peer left the future must resolve
+    # Rejected("error") — never hang
+    plan = FaultPlan(ChaosConfig(schedule=[("i0", 0, "step_error"),
+                                           ("i1", 0, "step_error")]))
+    pool = _pool(2, plan)
+    srv = _server(pool)
+    res = srv.submit("u", list(range(40))).result(timeout=10)
+    assert isinstance(res, Rejected) and res.reason == "error"
+    assert srv.metrics.total("requests_retried") >= 1
+    srv.shutdown(drain=True, timeout=5)
+
+
+def test_retry_disabled_rejects_lost_inflight():
+    plan = FaultPlan(ChaosConfig(schedule=[("i0", 0, "step_error")]))
+    pool = _pool(2, plan)
+    srv = _server(pool, retry=RetryPolicy(budget=0))
+    res = srv.submit("u", list(range(40))).result(timeout=10)
+    assert isinstance(res, Rejected) and res.reason == "error"
+    assert srv.metrics.total("requests_retried") == 0
+    srv.shutdown(drain=True, timeout=5)
+
+
+def test_transient_submit_failure_falls_back_to_peer():
+    plan = FaultPlan(ChaosConfig(schedule=[("i0", 0, "submit_error")]))
+    pool = _pool(2, plan)
+    srv = _server(pool)
+    res = srv.submit("u", list(range(40))).result(timeout=10)
+    assert not isinstance(res, Rejected)
+    assert srv.metrics.counter("submit_failures", "i0").value == 1
+    assert pool.engines["i1"].steps == 1     # the fallback peer served it
+    srv.shutdown(drain=True, timeout=5)
+
+
+def test_nan_corruption_quarantined_and_retried():
+    plan = FaultPlan(ChaosConfig(schedule=[("i0", 0, "nan_score")]))
+    pool = _pool(2, plan)
+    srv = _server(pool)
+    res = srv.submit("u", list(range(40)), allowed_tokens=(5, 9)) \
+        .result(timeout=10)
+    assert not isinstance(res, Rejected)
+    assert all(np.isfinite(v) for v in res["scores"].values())
+    assert srv.metrics.total("results_quarantined") == 1
+    assert srv.metrics.total("requests_retried") == 1
+    # quarantine is NOT a crash: the producing instance stays healthy
+    assert pool.healthy["i0"] is True
+    srv.shutdown(drain=True, timeout=5)
+
+
+# ---- watchdog + exactly-once -------------------------------------------------
+
+def test_hang_trips_watchdog_and_late_result_is_dropped():
+    plan = FaultPlan(ChaosConfig(schedule=[("i0", 0, "hang")],
+                                 hang_seconds=0.8))
+    pool = _pool(2, plan)
+    wd = JCTDeadlineWatchdog(factor=4.0, min_deadline=0.12, interval=0.02)
+    srv = _server(pool, watchdog=wd)
+    fut = srv.submit("u", list(range(40)), allowed_tokens=(5, 9))
+    counts = _count_resolutions([fut])
+    t0 = time.perf_counter()
+    res = fut.result(timeout=10)
+    resolved_in = time.perf_counter() - t0
+    assert not isinstance(res, Rejected)
+    # the future resolved via the retry path WELL before the hang released
+    assert resolved_in < 0.6, resolved_in
+    assert srv.metrics.total("watchdog_trips") >= 1
+    assert pool.healthy["i0"] is False
+    # once the hang releases, i0's worker harvests the stale batch — the
+    # tombstone must swallow it (exactly-once), counted as a late drop
+    deadline = time.monotonic() + 5
+    while (srv.metrics.total("late_results_dropped") < 1
+           and time.monotonic() < deadline):
+        time.sleep(0.02)
+    assert srv.metrics.total("late_results_dropped") == 1
+    assert counts[0] == 1
+    srv.shutdown(drain=True, timeout=5)
+
+
+def test_straggler_below_deadline_does_not_trip():
+    plan = FaultPlan(ChaosConfig(schedule=[("i0", 0, "straggler")],
+                                 straggler_seconds=0.05))
+    pool = _pool(2, plan)
+    wd = JCTDeadlineWatchdog(factor=4.0, min_deadline=0.5, interval=0.02)
+    srv = _server(pool, watchdog=wd)
+    res = srv.submit("u", list(range(40))).result(timeout=10)
+    assert not isinstance(res, Rejected)
+    assert srv.metrics.total("watchdog_trips") == 0
+    assert srv.metrics.total("requests_retried") == 0
+    assert pool.healthy["i0"] is True        # slow is not dead
+    srv.shutdown(drain=True, timeout=5)
+
+
+# ---- races (satellite S4) ----------------------------------------------------
+
+def test_cancel_racing_inflight_step_still_serves_exactly_once():
+    pool = _pool(1, sec_per_token=0.01)      # ~0.4s step
+    srv = _server(pool, watchdog=None)
+    fut = srv.submit("u", list(range(40)))
+    counts = _count_resolutions([fut])
+    eng = pool.engines["i0"]
+    deadline = time.monotonic() + 5
+    while not eng._inflight and time.monotonic() < deadline:
+        time.sleep(0.005)
+    assert eng._inflight, "step never started"
+    rid = eng._inflight[0]
+    # cancel() is queued-only by contract: an executing request cannot be
+    # recalled, so this returns False and the future still serves
+    assert srv.cancel(rid) is False
+    res = fut.result(timeout=10)
+    assert not isinstance(res, Rejected)
+    assert counts[0] == 1
+    srv.shutdown(drain=True, timeout=5)
+
+
+def test_cancel_queued_behind_inflight_step():
+    pool = _pool(1, sec_per_token=0.01)
+    srv = _server(pool, watchdog=None)
+    fut1 = srv.submit("u", list(range(40)))
+    fut2 = srv.submit("u", list(range(40)))
+    eng = pool.engines["i0"]
+    deadline = time.monotonic() + 5
+    while not eng._inflight and time.monotonic() < deadline:
+        time.sleep(0.005)
+    with eng.lock:
+        queued = [r.req_id for r in eng.queue]
+    assert len(queued) == 1
+    assert srv.cancel(queued[0]) is True
+    res2 = fut2.result(timeout=10)
+    assert isinstance(res2, Rejected) and res2.reason == "cancelled"
+    assert not isinstance(fut1.result(timeout=10), Rejected)
+    srv.shutdown(drain=True, timeout=5)
+
+
+def test_submit_races_mark_failed_under_injector():
+    """Submitting threads race a chaos-monkey thread that fails and
+    resurrects instances while transient submit faults fire — every future
+    must resolve exactly once, and the pool must keep serving."""
+    plan = FaultPlan(ChaosConfig(seed=3, submit_error=0.1))
+    pool = _pool(3, plan)
+    srv = _server(pool, retry=RetryPolicy(budget=3, backoff=0.0))
+    futs, flock = [], threading.Lock()
+    stop = threading.Event()
+
+    def submitter(k):
+        for j in range(40):
+            f = srv.submit(f"u{k}-{j}", list(range(30)))
+            with flock:
+                futs.append(f)
+            time.sleep(0.001)
+
+    def monkey():
+        names = ["i0", "i1", "i2"]
+        k = 0
+        while not stop.is_set():
+            victim = names[k % 3]
+            k += 1
+            srv.mark_failed(victim)
+            time.sleep(0.01)
+            alive = [n for n in names if pool.healthy.get(n)]
+            srv.scale_to(alive)              # remove the corpse...
+            srv.scale_to(names)              # ...and resurrect it fresh
+            time.sleep(0.02)
+
+    threads = [threading.Thread(target=submitter, args=(k,))
+               for k in range(3)]
+    mk = threading.Thread(target=monkey)
+    [t.start() for t in threads]
+    mk.start()
+    [t.join() for t in threads]
+    stop.set()
+    mk.join()
+    counts = _count_resolutions(futs)
+    assert srv.drain(timeout=30), "futures hung after chaos"
+    assert len(futs) == 120
+    assert all(f.done() for f in futs)
+    assert set(counts.values()) == {1}       # exactly once, every future
+    outcomes = [f.result() for f in futs]
+    served = [o for o in outcomes if not isinstance(o, Rejected)]
+    assert len(served) >= 0.9 * len(futs)
+    srv.shutdown(drain=True, timeout=5)
+
+
+# ---- worker harvest regression (satellite S1) --------------------------------
+
+class VanishingResultEngine(FakeServingEngine):
+    """First step's result disappears between completion and harvest — the
+    window a concurrent confiscation/cancellation leaves behind."""
+
+    def __init__(self, *a, **kw):
+        super().__init__(*a, **kw)
+        self._vanish_once = True
+
+    def step(self):
+        rid = super().step()
+        if rid is not None and self._vanish_once:
+            self._vanish_once = False
+            with self.lock:
+                self.results.pop(rid, None)
+        return rid
+
+
+def test_worker_survives_missing_result_id():
+    """Regression: harvest used ``results.pop(i)`` — a missing id raised
+    KeyError inside the worker, misclassifying the ENGINE as failed."""
+    pool = _pool(1, cls=VanishingResultEngine)
+    srv = _server(pool, retry=None)
+    srv.submit("u", list(range(20)))         # result vanishes pre-harvest
+    fut2 = srv.submit("u", list(range(20)))  # must still be served
+    res2 = fut2.result(timeout=10)
+    assert not isinstance(res2, Rejected)
+    assert srv.metrics.total("engine_errors") == 0
+    assert pool.healthy["i0"] is True
+    srv.shutdown(drain=False)
+
+
+# ---- engine non-finite guard (satellite S3) ----------------------------------
+
+def test_engine_score_flags_nonfinite_logits():
+    from repro.core.engine import PrefillOnlyEngine
+    eng = object.__new__(PrefillOnlyEngine)  # _score only touches the guard
+    eng.result_guard = NaNGuard(3)
+    eng.nonfinite_results = 0
+    r = Request(n_input=4, arrival=0.0, chain=(), tokens=[1, 2, 3, 4],
+                allowed_tokens=(5, 9))
+    r.finish_time = 1.0
+    logits = np.zeros((1, 16))
+    out = PrefillOnlyEngine._score(eng, logits, r)
+    assert "corrupt" not in out
+    assert sum(out["scores"].values()) == pytest.approx(1.0)
+    logits[0, 5] = np.nan
+    out = PrefillOnlyEngine._score(eng, logits, r)
+    assert out["corrupt"] == "nonfinite_logits" and out["token"] == -1
+    assert eng.nonfinite_results == 1
+    # unconstrained argmax tolerates -inf ("never this token")...
+    r2 = Request(n_input=4, arrival=0.0, chain=(), tokens=[1, 2, 3, 4])
+    r2.finish_time = 1.0
+    logits2 = np.zeros((1, 16))
+    logits2[0, 3] = -np.inf
+    assert "corrupt" not in PrefillOnlyEngine._score(eng, logits2, r2)
+    # ...but not NaN, and not an all-non-finite row
+    logits2[0, 7] = np.nan
+    assert PrefillOnlyEngine._score(eng, logits2, r2)["corrupt"] \
+        == "nonfinite_logits"
+    assert PrefillOnlyEngine._score(
+        eng, np.full((1, 16), -np.inf), r2)["corrupt"] == "nonfinite_logits"
+    assert eng.nonfinite_results == 3
+    # the clean -inf result in between reset the guard's consecutive count
+    # (NaNGuard policy: only CONSECUTIVE corruption escalates to reload)
+    assert eng.result_guard.consecutive == 2
+    assert eng.result_guard.total_skipped == 3
+
+
+# ---- brownout ----------------------------------------------------------------
+
+def test_brownout_ladder_escalation_and_hysteresis():
+    b = BrownoutController(enter=(2, 6, 12), exit=(1, 3, 6), hold=2)
+    assert b.evaluate(0.5) == 0
+    assert b.evaluate(13.0) == 3             # escalation is immediate
+    assert b.escalations == 1
+    assert b.evaluate(7.0) == 3              # below enter[2] but above exit[2]
+    assert b.evaluate(4.0) == 3              # calm 1 of 2
+    assert b.evaluate(4.0) == 2              # calm 2 -> step down ONE level
+    assert b.evaluate(2.5) == 2              # calm 1 (exit[1]=3)
+    assert b.evaluate(3.5) == 2              # interrupted: calm resets
+    assert b.evaluate(2.5) == 2
+    assert b.evaluate(2.5) == 1
+    assert b.pressure() == pytest.approx(b.slack_factor)
+    assert b.state() == "tighten"
+    # shed-rate maps onto the backlog axis
+    assert b.signal(0.0, 0.5) == pytest.approx(0.5 * b.shed_to_seconds)
+
+
+def test_brownout_levels_apply_to_server():
+    pool = _pool(2, sec_per_token=0.004)     # 100-token requests ~0.4s
+    b = BrownoutController(enter=(0.2, 0.5, 1.0), exit=(0.05, 0.1, 0.2),
+                           hold=2, slack_factor=1.5)
+    ctrl = AdmissionController(adapt=False)
+    srv = _server(pool, brownout=b, admission=ctrl)
+    futs = [srv.submit(f"u{i}", list(range(100))) for i in range(12)]
+    deadline = time.monotonic() + 5
+    while b.level < 3 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert b.level == 3, "backlog never escalated the ladder"
+    late = srv.submit("u-late", list(range(100)))
+    rej = late.result(timeout=2)
+    assert isinstance(rej, Rejected) and rej.reason == "brownout"
+    assert ctrl.pressure == pytest.approx(1.5)
+    assert any(pool.engines[n].degraded for n in pool.live_names())
+    assert srv.metrics.gauge("brownout_level").value == 3
+    assert srv.metrics.state_gauge(
+        "brownout_state", BrownoutController.LEVELS).state == "shed"
+    assert srv.drain(timeout=30)
+    deadline = time.monotonic() + 10         # backlog gone: ladder descends
+    while b.level > 0 and time.monotonic() < deadline:
+        time.sleep(0.02)
+    assert b.level == 0
+    assert ctrl.pressure == pytest.approx(1.0)
+    assert not any(pool.engines[n].degraded for n in pool.live_names())
+    assert all(f.done() for f in futs)
+    srv.shutdown(drain=True, timeout=5)
+
+
+# ---- the acceptance soak -----------------------------------------------------
+
+def _soak_round(seed):
+    """One seeded chaos trial: 40 requests through a 3-instance pool under
+    a mixed fault schedule, with a healer resurrecting failed instances.
+    Returns (plan, futures, resolution counts, drained)."""
+    if seed == 0:
+        # fully scheduled round: all five fault kinds fire deterministically
+        cfg = ChaosConfig(seed=0, hang_seconds=0.4, straggler_seconds=0.04,
+                          schedule=[("i0", 0, "submit_error"),
+                                    ("i0", 1, "step_error"),
+                                    ("i1", 0, "nan_score"),
+                                    ("i2", 0, "straggler"),
+                                    ("i1", 1, "hang")])
+    else:
+        cfg = ChaosConfig(seed=seed, step_error=0.03, hang=0.02,
+                          hang_seconds=0.4, straggler=0.03,
+                          straggler_seconds=0.04, nan_score=0.04,
+                          submit_error=0.06, max_faults=8)
+    plan = FaultPlan(cfg)
+    pool = _pool(3, plan, sec_per_token=2e-4)
+    wd = JCTDeadlineWatchdog(factor=4.0, min_deadline=0.15, interval=0.02)
+    srv = AsyncServer(pool, retry=RetryPolicy(budget=3, backoff=0.002),
+                      watchdog=wd).start()
+
+    stop = threading.Event()
+
+    def healer():
+        names = ["i0", "i1", "i2"]
+        while not stop.is_set():
+            if any(not pool.healthy.get(n, False) for n in names):
+                alive = [n for n in names if pool.healthy.get(n)]
+                srv.scale_to(alive)
+                srv.scale_to(names)
+            stop.wait(0.05)
+
+    hl = threading.Thread(target=healer)
+    hl.start()
+    futs = []
+    rng = np.random.default_rng(seed)
+    for j in range(40):
+        futs.append(srv.submit(f"u{int(rng.integers(8))}",
+                               list(range(30 + int(rng.integers(30)))),
+                               allowed_tokens=(5, 9)))
+        time.sleep(0.002)
+    counts = _count_resolutions(futs)
+    drained = srv.drain(timeout=30)
+    stop.set()
+    hl.join()
+    srv.shutdown(drain=True, timeout=5)
+    return plan, futs, counts, drained
+
+
+def test_chaos_soak_exactly_once_and_mostly_served():
+    """ISSUE 6 acceptance: >= 5 fault kinds across seeded trials, 200+
+    futures, every one resolves exactly once, none hangs past the watchdog
+    deadline (bounded drain), and >= 90% resolve SERVED."""
+    all_kinds = set()
+    total, served_total = 0, 0
+    for seed in range(6):
+        plan, futs, counts, drained = _soak_round(seed)
+        assert drained, f"seed {seed}: futures hung past the drain bound"
+        assert all(f.done() for f in futs), f"seed {seed}: unresolved future"
+        assert set(counts.values()) == {1}, \
+            f"seed {seed}: exactly-once violated: {counts}"
+        outcomes = [f.result() for f in futs]
+        for o in outcomes:
+            if isinstance(o, Rejected):
+                # the only legitimate terminal rejections under chaos
+                assert o.reason in ("error", "no_instances"), o
+            else:
+                assert all(np.isfinite(v)
+                           for v in o.get("scores", {}).values()), \
+                    f"seed {seed}: NaN delivered"
+        total += len(outcomes)
+        served_total += sum(1 for o in outcomes
+                            if not isinstance(o, Rejected))
+        all_kinds |= set(plan.counts())
+    assert total >= 200
+    assert len(all_kinds) >= 5, all_kinds
+    assert served_total >= 0.9 * total, (served_total, total)
