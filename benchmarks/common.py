@@ -1,8 +1,12 @@
 """Shared benchmark helpers."""
 from __future__ import annotations
 
+import json
+import pathlib
+import platform
+import subprocess
 import time
-from typing import Callable, List
+from typing import Callable, Dict, List, Optional
 
 
 def time_call(fn: Callable, *args, warmup: int = 1, iters: int = 3,
@@ -24,3 +28,40 @@ def emit(name: str, us_per_call: float, derived: str = "") -> str:
     line = f"{name},{us_per_call:.1f},{derived}"
     print(line, flush=True)
     return line
+
+
+def bench_record(bench: str, *, config: Optional[Dict] = None,
+                 rows: Optional[List[Dict]] = None, **extra) -> Dict:
+    """Uniform machine-readable benchmark record (the per-PR longitudinal
+    trajectory the ROADMAP asks for — BENCH_*.json all share this shape).
+
+    ``config`` is the knobs the run was taken under, ``rows`` the measured
+    results; ``extra`` top-level keys hold comparisons/derived numbers.
+    ``host``/``commit`` stamp where the numbers came from, so a regression
+    hunt can tell a code change from a host change.
+    """
+    try:
+        commit = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], capture_output=True,
+            text=True, timeout=5).stdout.strip() or None
+    except Exception:
+        commit = None
+    return {
+        "bench": bench,
+        "created_unix": round(time.time(), 1),
+        "host": {"machine": platform.machine(),
+                 "python": platform.python_version()},
+        "commit": commit,
+        "config": config or {},
+        "rows": rows or [],
+        **extra,
+    }
+
+
+def write_bench_json(record: Dict, path) -> pathlib.Path:
+    """Write one benchmark record as stable, diff-friendly JSON."""
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(json.dumps(record, indent=2, sort_keys=False) + "\n")
+    print(f"wrote {p}", flush=True)
+    return p

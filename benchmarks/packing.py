@@ -52,7 +52,7 @@ VOCAB = 512
 
 
 def _serve(cfg, params, trace, ecfg, reps=REPS, reset_cache=True,
-           allowed=None):
+           allowed=None, tracer=None, metrics=None):
     """Serve ``trace`` ``reps`` times on one engine; return (best pass
     seconds, stats of the last pass, last pass's per-request score dicts).
     Pass 0 warms the jit caches (and, with ``reset_cache=False``, the
@@ -60,8 +60,14 @@ def _serve(cfg, params, trace, ecfg, reps=REPS, reset_cache=True,
     remaining passes is reported (host-noise floor). Early passes also
     CALIBRATE the JCT fit — the engine's packing cost model needs a real
     per-step overhead estimate (b) before it accepts the larger packs that
-    win; the pass count must leave several converged passes for the min."""
+    win; the pass count must leave several converged passes for the min.
+
+    ``tracer``/``metrics`` bind the observability plane to the engine and
+    open/close a full trace per request — the traced configuration of the
+    tracing-overhead case."""
     eng = PrefillOnlyEngine(cfg, params, ecfg)
+    if tracer is not None or metrics is not None:
+        eng.bind_telemetry(metrics=metrics, instance="bench", tracer=tracer)
     times = []
     ids = []
     for _ in range(reps):
@@ -73,11 +79,18 @@ def _serve(cfg, params, trace, ecfg, reps=REPS, reset_cache=True,
         eng.packed_steps = eng.packed_requests = eng.steps = 0
         eng.packed_hit_requests = 0
         eng.results.clear()
-        ids = [eng.submit(list(r.tokens), allowed_tokens=allowed, now=0.0)
-               for r in trace.requests]
+        ids = []
+        for r in trace.requests:
+            rid = eng.submit(list(r.tokens), allowed_tokens=allowed, now=0.0)
+            ids.append(rid)
+            if tracer is not None:
+                tracer.begin(rid=rid, n_input=len(r.tokens))
         t0 = time.perf_counter()
         eng.run_until_drained()
         times.append(time.perf_counter() - t0)
+        if tracer is not None:
+            for rid in ids:
+                tracer.finish_rid(rid, "delivered")
     scores = ([eng.results[i].get("scores") for i in ids]
               if allowed else None)
     return min(times[1:]), eng.stats(), scores
@@ -136,6 +149,84 @@ def run_prefix_hit(emit, smoke=False, cfg=None, params=None):
          f"(max score dev {max_dev:.2e})")
     return [("prefix_hit", tps_solo, tps_pack, s_solo["padding_waste"],
              s_pack["padding_waste"])]
+
+
+def run_traced_overhead(emit, smoke=False, cfg=None, params=None):
+    """Always-on-cheap check: the packed prefix-hit workload with the full
+    observability plane bound (SpanTracer + MetricsRegistry + per-request
+    trace open/close) vs the bare engine. Acceptance: traced throughput
+    within 3% of untraced.
+
+    PAIRED design on ONE engine, alternating traced/untraced passes: the
+    jit caches, prefix cache, and — critically — the JCT-fit trajectory are
+    shared by both arms. Two separate engines would fit different JCT
+    coefficients from their different warm-up timing, converge on different
+    batch plans (different steps/pass), and report that plan delta as fake
+    "tracing overhead" (observed: 8 vs 14 steps/pass, a ~10% swing dwarfing
+    the real instrumentation cost)."""
+    from repro.serving import SpanTracer
+    from repro.serving.metrics import MetricsRegistry
+
+    if cfg is None:
+        cfg = reduce_config(get_config(ARCH), hybrid_chunk=0)
+        api = build(cfg)
+        params = materialize(jax.random.PRNGKey(0), api.defs(), jnp.float32)
+    trace, _, pack_cfg = _prefix_hit_case(smoke)
+    tot = trace.total_tokens
+    eng = PrefillOnlyEngine(cfg, params, pack_cfg)
+    tracer = SpanTracer(capacity=4096)
+    registry = MetricsRegistry()
+
+    def one_pass(traced):
+        if traced:
+            eng.bind_telemetry(metrics=registry, instance="bench",
+                               tracer=tracer)
+        else:
+            eng.bind_telemetry()             # unbind: the bare engine
+        eng.results.clear()
+        ids = []
+        for r in trace.requests:
+            rid = eng.submit(list(r.tokens), allowed_tokens=YES_NO, now=0.0)
+            ids.append(rid)
+            if traced:
+                tracer.begin(rid=rid, n_input=len(r.tokens))
+        t0 = time.perf_counter()
+        eng.run_until_drained()
+        dt = time.perf_counter() - t0
+        if traced:
+            for rid in ids:
+                tracer.finish_rid(rid, "delivered")
+        return dt
+
+    import statistics
+
+    for _ in range(4):                       # compiles + fit convergence
+        one_pass(False)
+    t_on, t_off = [], []
+    # per-pass noise on a shared CPU host is ~+-10% — far above the real
+    # instrumentation cost — so compare MEDIANS over many interleaved
+    # pairs, not minima of a few passes (a min-of-few estimator reported
+    # this same workload anywhere from -2% to +7% run to run)
+    for k in range(28):
+        (t_on if k % 2 == 0 else t_off).append(one_pass(k % 2 == 0))
+    med_off = statistics.median(t_off)
+    med_on = statistics.median(t_on)
+    tps_off, tps_on = tot / med_off, tot / med_on
+    overhead = med_on / med_off - 1.0
+    emit("packing/traced_overhead/untraced", med_off * 1e6,
+         f"{tps_off:.0f}tok/s")
+    emit("packing/traced_overhead/traced", med_on * 1e6,
+         f"{tps_on:.0f}tok/s traces={tracer.stats()['finished']}")
+    emit("packing/traced_overhead/overhead", 0.0,
+         f"{overhead * 100:+.2f}% wall ({tps_on / tps_off:.4f}x tok/s, "
+         f"median of {len(t_on)} paired passes)")
+    return {"untraced_tokens_per_sec": round(tps_off, 1),
+            "traced_tokens_per_sec": round(tps_on, 1),
+            "overhead_frac": round(overhead, 4),
+            "method": "paired interleaved passes, one engine, "
+                      f"median of {len(t_on)} per arm",
+            "traces_recorded": tracer.stats()["finished"],
+            "batches_recorded": tracer.stats()["batches"]}
 
 
 def run(emit):
@@ -202,7 +293,12 @@ def main():
         print(line)
         lines.append(line)
 
-    run_prefix_hit(emit, smoke=args.smoke)
+    cfg = reduce_config(get_config(ARCH), hybrid_chunk=0)
+    api = build(cfg)
+    params = materialize(jax.random.PRNGKey(0), api.defs(), jnp.float32)
+    rows = run_prefix_hit(emit, smoke=args.smoke, cfg=cfg, params=params)
+    overhead = run_traced_overhead(emit, smoke=args.smoke, cfg=cfg,
+                                   params=params)
     out = args.out or (
         "benchmarks/results/packing_smoke.txt" if args.smoke
         else "benchmarks/results/packing_prefix_hit.txt")
@@ -210,6 +306,23 @@ def main():
     path.parent.mkdir(parents=True, exist_ok=True)
     path.write_text("\n".join(lines) + "\n")
     print(f"wrote {path}")
+
+    from benchmarks.common import bench_record, write_bench_json
+    record = bench_record(
+        "packing",
+        config={"arch": ARCH, "smoke": args.smoke, "reps": 10,
+                "trace": "post_recommendation/prefix_hit"},
+        rows=[{"case": name,
+               "tokens_per_sec_solo": round(tps_solo, 1),
+               "tokens_per_sec_packed": round(tps_pack, 1),
+               "speedup": round(tps_pack / tps_solo, 3),
+               "padding_waste_solo": round(w_solo, 4),
+               "padding_waste_packed": round(w_pack, 4)}
+              for name, tps_solo, tps_pack, w_solo, w_pack in rows],
+        tracing_overhead=overhead)
+    jpath = ("benchmarks/results/packing_smoke.json" if args.smoke
+             else "benchmarks/results/BENCH_packing.json")
+    write_bench_json(record, jpath)
 
 
 if __name__ == "__main__":

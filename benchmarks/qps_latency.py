@@ -227,7 +227,7 @@ def main():
     if args.mode == "sim":
         run(emit)
         return
-    lines, _, _ = run_async(emit)
+    lines, over, routers = run_async(emit)
     if args.out:
         import os
         os.makedirs(os.path.dirname(args.out), exist_ok=True)
@@ -235,6 +235,30 @@ def main():
             f.write("name,us_per_call,derived\n")
             f.write("\n".join(lines) + "\n")
         print(f"wrote {args.out}")
+
+    from benchmarks.common import bench_record, write_bench_json
+
+    def _row(case, r, **extra):
+        return {"case": case,
+                "served": r["served"], "requests": r["requests"],
+                "throughput_rps": round(r["throughput_rps"], 3),
+                "mean_latency_s": round(r["mean_latency"], 4),
+                "p50_latency_s": round(r["p50_latency"], 4),
+                "p99_latency_s": round(r["p99_latency"], 4),
+                "token_hit_rate": round(r["token_hit_rate"], 3),
+                "reject_reasons": r.get("reject_reasons", {}), **extra}
+
+    rows = [_row(f"router/{name}/q1.0x", r)
+            for name, r in routers.items()]
+    rows += [_row(f"overload2x/{mode}/n{n}", r, n_requests=n)
+             for (mode, n), r in over.items()]
+    record = bench_record(
+        "qps_latency_async",
+        config={"arch": ASYNC_ARCH, "instances": ASYNC_INSTANCES,
+                "router_trace": ASYNC_TRACE,
+                "overload_trace": "credit_verification"},
+        rows=rows, log=lines)
+    write_bench_json(record, "benchmarks/results/BENCH_qps_latency.json")
 
 
 if __name__ == "__main__":

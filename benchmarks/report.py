@@ -1,24 +1,121 @@
 """Generate the EXPERIMENTS.md §Dry-run / §Roofline markdown tables from
-results/dryrun/*.json.
+results/dryrun/*.json — or, with ``--trace FILE``, a latency-decomposition
+report from a request-lifecycle trace dump.
 
     PYTHONPATH=src python -m benchmarks.report [--tag baseline]
+    PYTHONPATH=src python -m benchmarks.report --trace serve_trace.jsonl
+
+The trace report decomposes per-request wall time into queue / execute /
+score / other (other = end-to-end minus the instrumented spans: routing,
+admission, retry re-queues, result plumbing), reports p50/p95/p99 per
+component plus the mean composition of the slowest 1% of requests, and
+tabulates padding waste per pack class from the engine's batch records.
 """
 from __future__ import annotations
 
 import argparse
+import json
 from collections import defaultdict
-
-from benchmarks.roofline import fraction, load_cells
 
 
 def fmt_bytes(b):
     return f"{b / 2**30:.2f}"
 
 
+# ---- request-lifecycle trace report ----------------------------------------
+
+_PHASES = ("queue", "execute", "score")
+
+
+def load_trace(path):
+    """Split a --trace-dump / /trace JSONL file into request + batch rows."""
+    requests, batches = [], []
+    with open(path) as f:
+        for line in f:
+            if not line.strip():
+                continue
+            row = json.loads(line)
+            (requests if row.get("type") == "request" else batches).append(row)
+    return requests, batches
+
+
+def decompose(req):
+    """Per-request {phase: seconds} with 'total' and 'other'. Phase spans
+    are summed by name, so a retried request's two queue/execute spans
+    both count toward its queue/execute share."""
+    total = (req["t1"] or req["t0"]) - req["t0"]
+    parts = defaultdict(float)
+    for s in req["spans"]:
+        if s["name"] in _PHASES:
+            parts[s["name"]] += s["dur"]
+    parts["total"] = total
+    parts["other"] = max(0.0, total - sum(parts[p] for p in _PHASES))
+    return parts
+
+
+def _pct(xs, q):
+    xs = sorted(xs)
+    if not xs:
+        return 0.0
+    i = min(len(xs) - 1, int(round(q / 100.0 * (len(xs) - 1))))
+    return xs[i]
+
+
+def trace_report(path):
+    requests, batches = load_trace(path)
+    delivered = [r for r in requests if r.get("outcome") == "delivered"]
+    print(f"### Trace report: {path}\n")
+    outcomes = defaultdict(int)
+    for r in requests:
+        outcomes[r.get("outcome") or "active"] += 1
+    retries = sum(1 for r in requests
+                  for e in r["events"] if e["name"] == "retry")
+    print(f"{len(requests)} requests ({dict(sorted(outcomes.items()))}), "
+          f"{retries} retries, {len(batches)} batch records\n")
+    if delivered:
+        decomp = [decompose(r) for r in delivered]
+        print("| component | p50 | p95 | p99 | mean share of slowest 1% |")
+        print("|---|---|---|---|---|")
+        p99_total = _pct([d["total"] for d in decomp], 99)
+        tail = [d for d in decomp if d["total"] >= p99_total] or decomp
+        for phase in ("total",) + _PHASES + ("other",):
+            xs = [d[phase] for d in decomp]
+            share = (sum(d[phase] for d in tail)
+                     / max(1e-12, sum(d["total"] for d in tail)))
+            print(f"| {phase} | {_pct(xs, 50)*1e3:.1f}ms | "
+                  f"{_pct(xs, 95)*1e3:.1f}ms | {_pct(xs, 99)*1e3:.1f}ms | "
+                  f"{share*100:.1f}% |")
+    if batches:
+        by_kind = defaultdict(list)
+        for b in batches:
+            by_kind[b.get("kind", "?")].append(b)
+        print("\n| pack class | steps | reqs | computed tok | waste | "
+              "compiles | mean wall |")
+        print("|---|---|---|---|---|---|---|")
+        for kind in sorted(by_kind):
+            bs = by_kind[kind]
+            comp = sum(b["computed_tokens"] for b in bs)
+            padded = sum(b["padded_tokens"] for b in bs)
+            waste = 1.0 - comp / max(1, padded)
+            wall = sum(b["wall"] for b in bs) / len(bs)
+            print(f"| {kind} | {len(bs)} | "
+                  f"{sum(b['n_requests'] for b in bs)} | {comp} | "
+                  f"{waste:.3f} | "
+                  f"{sum(1 for b in bs if b.get('compiled'))} | "
+                  f"{wall*1e3:.1f}ms |")
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--trace", default=None, metavar="FILE",
+                    help="latency-decomposition report from a trace dump "
+                         "(JSONL from --trace-dump or the /trace endpoint)")
     args = ap.parse_args()
+    if args.trace:
+        trace_report(args.trace)
+        return
+    from benchmarks.roofline import fraction, load_cells
     cells = load_cells(args.tag)
     by_key = {(c["arch"], c["shape"], c["mesh"]): c for c in cells}
     archs = sorted({c["arch"] for c in cells})

@@ -141,10 +141,17 @@ def main():
     out_path = pathlib.Path(args.out) if args.out else (
         pathlib.Path(__file__).parent / "results"
         / "BENCH_serving_faults.json")
-    out_path.parent.mkdir(parents=True, exist_ok=True)
-    out_path.write_text(json.dumps(result, indent=2) + "\n")
+    from benchmarks.common import bench_record, write_bench_json
+    result.pop("bench", None)
+    record = bench_record(
+        "serving_faults",
+        config={k: result.pop(k) for k in
+                ("arch", "trace", "instances", "requests_per_scenario",
+                 "qps", "fault_schedule") if k in result},
+        rows=result.pop("scenarios", []),
+        **result)
+    write_bench_json(record, out_path)
     print(json.dumps(result["comparison"], indent=2))
-    print(f"wrote {out_path}")
 
 
 if __name__ == "__main__":

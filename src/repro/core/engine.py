@@ -53,6 +53,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+from collections import deque
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
@@ -67,6 +68,7 @@ from repro.models import transformer as tfm
 from repro.models.layers import PAD_POS
 from repro.models.model import cast_params
 from repro.runtime.fault_tolerance import NaNGuard
+from repro.serving.tracing import BatchRecord, JCTCalibrationMonitor
 
 
 def _bucket(n: int, sizes: Sequence[int]) -> int:
@@ -166,6 +168,18 @@ class PrefillOnlyEngine:
         # the batched gathered-prefix path and run the cheap solo-suffix
         # path instead — per-step cost variance collapses under overload
         self.degraded = False
+        # observability: always-on bounded per-step BatchRecords + online
+        # JCT-calibration monitoring (residuals per bucket class, drift ->
+        # forced refit). Prometheus/trace export activates via
+        # bind_telemetry(); unbound, the only cost is the ring append.
+        self.batch_records: "deque[BatchRecord]" = deque(maxlen=256)
+        self.jct_monitor = JCTCalibrationMonitor(
+            self.jct_model, buckets=ecfg.suffix_buckets)
+        self.metrics = None
+        self.instance_name = ""
+        self.tracer = None
+        self._last_jit: Tuple[str, Tuple, bool] = ("", (), False)
+        self._last_shape: Dict[str, int] = {}
 
     # ---- profile run (paper §3.1) ------------------------------------------
     def profile(self, lengths: Sequence[int] = (64, 128, 256, 512)) -> float:
@@ -334,6 +348,16 @@ class PrefillOnlyEngine:
             return (list(self._inflight), self._inflight_pred,
                     self._inflight_t0)
 
+    def bind_telemetry(self, metrics=None, instance: str = "",
+                       tracer=None) -> None:
+        """Attach the serving registry and/or a SpanTracer. The JCT monitor
+        exports coefficient gauges immediately so a scrape before the first
+        warm step still sees the profile() fit."""
+        self.metrics = metrics
+        self.instance_name = instance
+        self.tracer = tracer
+        self.jct_monitor.bind(metrics, instance)
+
     def set_degraded(self, flag: bool) -> None:
         """Brownout level >=2 hook: disable hit co-packing's batched
         gathered-prefix forward (hits run the cheap solo-suffix path,
@@ -357,13 +381,14 @@ class PrefillOnlyEngine:
                 for r in batch)
             self._inflight_t0 = now
         self._step_compiled = False
+        padded0 = self.padded_slots
         if len(batch) == 1:
             r = batch[0]
             logits = self._execute(r)
             # async dispatch: sync before timestamping, or the JCT model
             # observes launch latency instead of compute time
             jax.block_until_ready(logits)
-            r.finish_time = time.perf_counter()
+            done = r.finish_time = time.perf_counter()
             with self.lock:
                 self.results[r.req_id] = self._score(logits, r)
                 # steps that compiled a fresh shape are NOT JCT samples — a
@@ -395,10 +420,66 @@ class PrefillOnlyEngine:
                 1 for r in batch if r.n_cached_at_start > 0)
         self.steps += 1
         self._last_step_ids = [r.req_id for r in batch]
+        self._record_step(batch, now, done, time.perf_counter(), padded0)
         with self.lock:
             self._inflight = []
             self._inflight_pred = 0.0
         return batch[0].req_id
+
+    def _record_step(self, batch: List[Request], t0: float, t_done: float,
+                     t_scored: float, padded0: int) -> None:
+        """Observability epilogue of step(): BatchRecord into the ring, JCT
+        calibration sample (warm steps only), per-request trace spans."""
+        pred = self._inflight_pred
+        computed = sum(r.n_input - r.n_cached_at_start for r in batch)
+        kind = ("solo" if len(batch) == 1
+                else "hit" if any(r.n_cached_at_start for r in batch)
+                else "miss")
+        path, key, _ = self._last_jit
+        shape = self._last_shape
+        rec = BatchRecord(
+            step=self.steps, ts=t_done, instance=self.instance_name,
+            kind=kind, n_requests=len(batch),
+            req_ids=tuple(r.req_id for r in batch),
+            computed_tokens=computed,
+            padded_tokens=self.padded_slots - padded0,
+            S=shape.get("S", 0), Nb=shape.get("Nb", 0),
+            smax=shape.get("smax", 0), pmax=shape.get("pmax", 0),
+            K=shape.get("K", 0), jit_path=path, jit_key=key,
+            compiled=self._step_compiled, predicted_jct=pred,
+            wall=t_done - t0)
+        self.batch_records.append(rec)
+        # compile steps are excluded from calibration for the same reason
+        # they are excluded from the JCT fit: compile time is unbounded and
+        # not a prediction error
+        if not self._step_compiled:
+            self.jct_monitor.observe(pred, t_done - t0, computed)
+        m = self.metrics
+        if m is not None:
+            m.gauge("step_padding_waste", self.instance_name).set(
+                rec.padding_waste)
+            m.counter(f"pack_{kind}_steps", self.instance_name).inc()
+            m.histogram("batch_wall_seconds", self.instance_name).observe(
+                rec.wall)
+        tr = self.tracer
+        if tr is None:
+            return
+        tr.record_batch(rec)
+        inst = self.instance_name
+        peers = [r.req_id for r in batch]
+        for r in batch:
+            tr.span_rid(r.req_id, "queue", r.arrival, t0, instance=inst)
+            tr.span_rid(r.req_id, "execute", t0, t_done, instance=inst,
+                        pack=kind, compiled=self._step_compiled,
+                        jit_path=path)
+            tr.span_rid(r.req_id, "score", t_done, t_scored, instance=inst)
+            tr.event_rid(r.req_id, "batch", kind=kind, step=self.steps,
+                         peers=[p for p in peers if p != r.req_id],
+                         predicted_jct=pred, computed_tokens=computed,
+                         n_cached=r.n_cached_at_start)
+            if self._step_compiled:
+                tr.event_rid(r.req_id, "jit_compile", path=path,
+                             key=list(key))
 
     # ---- batch formation (prepacking) ---------------------------------------
     def _usable_prefix_len(self, n_input: int, matched_blocks: int) -> int:
@@ -594,6 +675,8 @@ class PrefillOnlyEngine:
         keep_pad = min(_bucket(keep, self.ecfg.suffix_buckets) if keep else 0,
                        S)
         key = (S, keep_pad)
+        self._last_jit = ("fresh", key, key not in self._fresh_fns)
+        self._last_shape = {"S": S}
         if key not in self._fresh_fns:
             self._step_compiled = True
             cfg = self.cfg
@@ -724,6 +807,8 @@ class PrefillOnlyEngine:
             cum += keeps[n]
         last_idx[N:] = last_idx[N - 1]
         self.padded_slots += Nb * pmax + S
+        self._last_shape = {"S": S, "Nb": Nb if pmax else 0, "smax": smax,
+                            "pmax": pmax, "K": K}
         if pmax:
             logits, kv = self._run_packed_hit(
                 S, Nb, smax, pmax, K, toks, pos, last_idx, kv_idx,
@@ -756,6 +841,7 @@ class PrefillOnlyEngine:
     def _run_packed_miss(self, S: int, K: int, toks, segs, pos, last_idx,
                          kv_idx):
         key = (S, K)
+        self._last_jit = ("packed_miss", key, key not in self._packed_fns)
         if key not in self._packed_fns:
             self._step_compiled = True
             cfg = self.cfg
@@ -779,6 +865,8 @@ class PrefillOnlyEngine:
         segment n's prefix, zero-padded) and run
         ``prefill_packed_with_prefix``."""
         key = (S, Nb, smax, pmax, K)
+        self._last_jit = ("packed_hit", key,
+                          key not in self._packed_hit_fns)
         if key not in self._packed_hit_fns:
             self._step_compiled = True
             cfg = self.cfg
@@ -829,6 +917,8 @@ class PrefillOnlyEngine:
         keep_pad = min(_bucket(keep_new, self.ecfg.suffix_buckets)
                        if keep_new else 0, S)
         key = (S, P, keep_pad)
+        self._last_jit = ("suffix", key, key not in self._suffix_fns)
+        self._last_shape = {"S": S, "pmax": P}
         if key not in self._suffix_fns:
             self._step_compiled = True
             cfg = self.cfg
@@ -899,4 +989,7 @@ class PrefillOnlyEngine:
             "padding_waste": 1.0 - (self.total_tokens
                                     / max(1, self.padded_slots)),
             "cache": self.cache.stats(),
+            # JCT-calibration summary: coefficients, residual p50/p95,
+            # refit counts — readable without scraping Prometheus
+            "jct": self.jct_monitor.summary(),
         }

@@ -48,6 +48,7 @@ class LinearProxyJCT:
         self.pearson_r: float = 1.0
         self.window = window
         self.refit_every = refit_every
+        self.fits = 0
         self._recent: List[Sample] = []
         self._since_fit = 0
 
@@ -68,6 +69,7 @@ class LinearProxyJCT:
         coef, *_ = np.linalg.lstsq(A, t, rcond=None)
         self.a, self.b = float(max(coef[0], 1e-12)), float(max(coef[1], 0.0))
         self.pearson_r = pearson(miss, t)
+        self.fits += 1
         return self
 
     def predict(self, n_input: int, n_cached: int = 0) -> float:

@@ -20,9 +20,11 @@ each instance is one mesh tile (see DESIGN.md §5 instance sizing).
 from __future__ import annotations
 
 import argparse
+import json
 import threading
 import time
 from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from pathlib import Path
 from typing import Dict, Optional
 
 import jax
@@ -40,7 +42,8 @@ from repro.runtime.fault_tolerance import (InstancePool,
 from repro.runtime.sharding import materialize
 from repro.serving import (AdmissionController, AsyncServer,
                            BrownoutController, ChaosConfig, FaultPlan,
-                           Rejected, RetryPolicy, get_router, wrap_pool)
+                           Rejected, RetryPolicy, SpanTracer, get_router,
+                           wrap_pool)
 
 
 def make_pool(arch: str, n_instances: int = 2, *, reduced: bool = True,
@@ -73,25 +76,37 @@ def make_pool(arch: str, n_instances: int = 2, *, reduced: bool = True,
     return pool
 
 
-def start_metrics_server(registry, port: int = 0,
-                         host: str = "127.0.0.1") -> ThreadingHTTPServer:
-    """Plain-HTTP Prometheus scrape endpoint over a ``MetricsRegistry``.
+def start_metrics_server(registry, port: int = 0, host: str = "127.0.0.1",
+                         tracer=None) -> ThreadingHTTPServer:
+    """Plain-HTTP observability endpoint over a ``MetricsRegistry`` (and,
+    when a ``SpanTracer`` is given, its trace rings).
 
-    GET /metrics returns ``registry.render_prometheus()``; anything else is
-    404. Runs in a daemon thread; ``port=0`` binds an ephemeral port (read
-    it back from ``server.server_address``). Call ``server.shutdown()`` to
-    stop.
+    GET /metrics           Prometheus text exposition
+    GET /trace             finished request timelines + batch records, JSONL
+    GET /trace.chrome.json Chrome-trace JSON (open in Perfetto / about:tracing)
+
+    Anything else is 404. Runs in a daemon thread; ``port=0`` binds an
+    ephemeral port (read it back from ``server.server_address``). Call
+    ``server.shutdown()`` to stop.
     """
 
     class Handler(BaseHTTPRequestHandler):
         def do_GET(self):                          # noqa: N802 (stdlib API)
-            if self.path.rstrip("/") not in ("", "/metrics"):
+            path = self.path.rstrip("/")
+            if path in ("", "/metrics"):
+                body = registry.render_prometheus().encode()
+                ctype = "text/plain; version=0.0.4; charset=utf-8"
+            elif path == "/trace" and tracer is not None:
+                body = tracer.dump_jsonl().encode()
+                ctype = "application/x-ndjson; charset=utf-8"
+            elif path == "/trace.chrome.json" and tracer is not None:
+                body = json.dumps(tracer.chrome_trace()).encode()
+                ctype = "application/json; charset=utf-8"
+            else:
                 self.send_error(404)
                 return
-            body = registry.render_prometheus().encode()
             self.send_response(200)
-            self.send_header("Content-Type",
-                             "text/plain; version=0.0.4; charset=utf-8")
+            self.send_header("Content-Type", ctype)
             self.send_header("Content-Length", str(len(body)))
             self.end_headers()
             self.wfile.write(body)
@@ -103,6 +118,17 @@ def start_metrics_server(registry, port: int = 0,
     threading.Thread(target=server.serve_forever, daemon=True,
                      name="metrics-http").start()
     return server
+
+
+def write_trace_dump(tracer, path) -> Path:
+    """Write the JSONL dump to ``path`` plus the Chrome-trace JSON next to
+    it (``<stem>.chrome.json``). Returns the chrome-trace path."""
+    p = Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(tracer.dump_jsonl())
+    cp = p.with_suffix(".chrome.json")
+    cp.write_text(json.dumps(tracer.chrome_trace()))
+    return cp
 
 
 def serve_trace(arch: str = "qwen1.5-0.5b",
@@ -125,7 +151,9 @@ def serve_trace(arch: str = "qwen1.5-0.5b",
                 watchdog_min_deadline: float = 1.0,
                 brownout: bool = False,
                 chaos: Optional[ChaosConfig] = None,
-                drain_timeout: Optional[float] = 30.0) -> Dict:
+                drain_timeout: Optional[float] = 30.0,
+                trace_dump: Optional[str] = None,
+                trace_capacity: int = 4096) -> Dict:
     """Replay a paper workload through the AsyncServer. Returns latency
     stats over SERVED requests plus rejection counts and a telemetry dump.
 
@@ -157,22 +185,30 @@ def serve_trace(arch: str = "qwen1.5-0.5b",
         eng_cfg = next(iter(pool.engines.values())).cfg
         ctrl = AdmissionController(max_input_tokens=max_input_tokens,
                                    memory_model=MemoryModel(eng_cfg))
+    # always-on request-lifecycle tracing: the ring bounds memory and the
+    # per-event cost is one lock + list append (<3% on the packing
+    # benchmark — see BENCH_packing.json), so the replay always records
+    # full timelines; --trace-dump / the /trace endpoint just export them
+    tracer = SpanTracer(capacity=trace_capacity)
     server = AsyncServer(
         pool, router=get_router(router), admission=ctrl,
         retry=RetryPolicy(budget=retry_budget),
         watchdog=(JCTDeadlineWatchdog(factor=watchdog_factor,
                                       min_deadline=watchdog_min_deadline)
                   if watchdog else None),
-        brownout=BrownoutController() if brownout else None)
+        brownout=BrownoutController() if brownout else None,
+        tracer=tracer)
     server.start()
     exporter = None
     # SIGTERM/SIGINT -> drain instead of dying mid-batch (satellite of the
     # chaos-hardening PR: a preempted serve CLI must resolve every future)
     handler = PreemptionHandler().install()
     if metrics_port is not None:
-        exporter = start_metrics_server(server.metrics, metrics_port)
+        exporter = start_metrics_server(server.metrics, metrics_port,
+                                        tracer=tracer)
         print(f"metrics: http://{exporter.server_address[0]}:"
-              f"{exporter.server_address[1]}/metrics")
+              f"{exporter.server_address[1]}/metrics  "
+              f"(+ /trace, /trace.chrome.json)")
     try:
         out = _replay(server, arch, trace_name, qps, scale_tokens, seed,
                       max_requests, deadline, pool, trace_kw,
@@ -180,6 +216,9 @@ def serve_trace(arch: str = "qwen1.5-0.5b",
                       drain_timeout=drain_timeout)
         if plan is not None:
             out["faults_injected"] = plan.counts()
+        if trace_dump:
+            cp = write_trace_dump(tracer, trace_dump)
+            print(f"trace dump: {trace_dump} + {cp}")
         return out
     finally:
         handler.uninstall()
@@ -253,6 +292,12 @@ def _replay(server, arch, trace_name, qps, scale_tokens, seed, max_requests,
         "p50_latency": float(np.percentile(lats, 50)),
         "p99_latency": float(np.percentile(lats, 99)),
         "token_hit_rate": hit / max(tot, 1),
+        # JCT-calibration fit per instance: coefficients, residual p50/p95,
+        # refit counts — readable from results without scraping Prometheus
+        "jct_fit": {n: e.stats().get("jct")
+                    for n, e in pool.engines.items()},
+        "trace": (server.tracer.stats()
+                  if server.tracer is not None else None),
         "metrics": server.metrics.render(),
         "per_instance": {n: e.stats() for n, e in pool.engines.items()},
     }
@@ -279,7 +324,11 @@ def main():
     ap.add_argument("--dump-metrics", action="store_true")
     ap.add_argument("--metrics-port", type=int, default=None,
                     help="serve Prometheus text metrics on this port "
-                         "(GET /metrics) during the replay; 0 = ephemeral")
+                         "(GET /metrics, /trace, /trace.chrome.json) "
+                         "during the replay; 0 = ephemeral")
+    ap.add_argument("--trace-dump", default=None, metavar="PATH",
+                    help="write request/batch timelines as JSONL to PATH "
+                         "(+ PATH stem .chrome.json for Perfetto) on exit")
     ap.add_argument("--retry-budget", type=int, default=2,
                     help="idempotent re-submissions per lost request "
                          "(0 disables retry)")
@@ -336,14 +385,22 @@ def main():
                       watchdog_factor=args.watchdog_factor,
                       watchdog_min_deadline=args.watchdog_min_deadline,
                       brownout=args.brownout, chaos=chaos_cfg,
-                      drain_timeout=args.drain_timeout)
+                      drain_timeout=args.drain_timeout,
+                      trace_dump=args.trace_dump)
     for k, v in out.items():
         if k == "metrics":
             if args.dump_metrics:
                 print("--- metrics ---")
                 print(v)
-        elif k != "per_instance":
+        elif k not in ("per_instance", "jct_fit"):
             print(f"{k}: {v}")
+    for n, fit in sorted((out.get("jct_fit") or {}).items()):
+        if fit:
+            print(f"jct_fit[{n}]: a={fit['a']:.3g} b={fit['b']:.3g} "
+                  f"r={fit['pearson_r']:.3f} "
+                  f"resid_p50={fit['residual_p50']:.4f} "
+                  f"resid_p95={fit['residual_p95']:.4f} "
+                  f"refits={fit['refits']}+{fit['drift_refits']}")
 
 
 if __name__ == "__main__":

@@ -190,6 +190,10 @@ class InstancePool:
         self.engines: Dict[str, object] = {}
         self.healthy: Dict[str, bool] = {}
         self.redispatched = 0
+        # observability hook: called as (req_id, src, dst) for every queued
+        # request re-homed off a failed/removed instance (AsyncServer wires
+        # this into the request's trace timeline)
+        self.on_rehome: Optional[Callable[[int, str, str], None]] = None
 
     def scale_to(self, names: List[str]) -> List:
         """Grow/shrink the pool. Returns the requests that could NOT be
@@ -235,6 +239,8 @@ class InstancePool:
                 with _engine_lock(peer):
                     peer.queue.append(r)
                 self.redispatched += 1
+                if self.on_rehome is not None:
+                    self.on_rehome(r.req_id, name, target)
             else:
                 dropped.append(r)
         return dropped

@@ -24,3 +24,5 @@ from repro.serving.metrics import (Counter, Gauge, Histogram,      # noqa: F401
 from repro.serving.router import (LeastBacklogRouter,              # noqa: F401
                                   UserHashRouter, get_router)
 from repro.serving.server import AsyncServer, RetryPolicy          # noqa: F401
+from repro.serving.tracing import (BatchRecord,                    # noqa: F401
+                                   JCTCalibrationMonitor, SpanTracer)

@@ -37,15 +37,26 @@ class Counter:
 
 
 class Gauge:
+    """Settable value. Locked like ``Counter``: maintenance and worker
+    threads both write gauges (queue depth, brownout level), and ``add()``
+    is a read-modify-write that would tear without it."""
+
     def __init__(self):
         self._v = 0.0
+        self._lock = threading.Lock()
 
     def set(self, v: float) -> None:
-        self._v = float(v)
+        with self._lock:
+            self._v = float(v)
+
+    def add(self, n: float = 1.0) -> None:
+        with self._lock:
+            self._v += n
 
     @property
     def value(self) -> float:
-        return self._v
+        with self._lock:
+            return self._v
 
 
 class StateGauge:
@@ -57,9 +68,11 @@ class StateGauge:
     def __init__(self, states: Sequence[str]):
         self.states = tuple(states)
         self._i = 0
+        self._lock = threading.Lock()
 
     def set(self, index: int) -> None:
-        self._i = int(index)
+        with self._lock:
+            self._i = int(index)
 
     @property
     def value(self) -> float:
@@ -155,29 +168,42 @@ class MetricsRegistry:
     def __init__(self, buckets: Sequence[float] = DEFAULT_BUCKETS):
         self._buckets = tuple(buckets)
         self._m: Dict[Tuple[str, str, str], object] = {}
+        self._help: Dict[str, str] = {}
         self._lock = threading.Lock()
 
-    def _get(self, kind: str, name: str, instance: str, factory):
+    def _get(self, kind: str, name: str, instance: str, factory,
+             help: Optional[str] = None):
         key = (kind, name, instance)
         with self._lock:
+            if help and name not in self._help:
+                self._help[name] = help
             if key not in self._m:
                 self._m[key] = factory()
             return self._m[key]
 
-    def counter(self, name: str, instance: str = GLOBAL) -> Counter:
-        return self._get("counter", name, instance, Counter)
+    def describe(self, name: str, help: str) -> None:
+        """Attach a HELP string to a metric name (first writer wins)."""
+        with self._lock:
+            self._help.setdefault(name, help)
 
-    def gauge(self, name: str, instance: str = GLOBAL) -> Gauge:
-        return self._get("gauge", name, instance, Gauge)
+    def counter(self, name: str, instance: str = GLOBAL,
+                help: Optional[str] = None) -> Counter:
+        return self._get("counter", name, instance, Counter, help)
 
-    def histogram(self, name: str, instance: str = GLOBAL) -> Histogram:
+    def gauge(self, name: str, instance: str = GLOBAL,
+              help: Optional[str] = None) -> Gauge:
+        return self._get("gauge", name, instance, Gauge, help)
+
+    def histogram(self, name: str, instance: str = GLOBAL,
+                  help: Optional[str] = None) -> Histogram:
         return self._get("hist", name, instance,
-                         lambda: Histogram(self._buckets))
+                         lambda: Histogram(self._buckets), help)
 
     def state_gauge(self, name: str, states: Sequence[str],
-                    instance: str = GLOBAL) -> StateGauge:
+                    instance: str = GLOBAL,
+                    help: Optional[str] = None) -> StateGauge:
         return self._get("state", name, instance,
-                         lambda: StateGauge(states))
+                         lambda: StateGauge(states), help)
 
     # ---- aggregation -----------------------------------------------------
     def _named(self, kind: str, name: str) -> List[Tuple[str, object]]:
@@ -234,6 +260,11 @@ class MetricsRegistry:
         return (v.replace("\\", r"\\").replace('"', r'\"')
                 .replace("\n", r"\n"))
 
+    @staticmethod
+    def _escape_help(v: str) -> str:
+        """HELP-text escaping per the spec: backslash and newline only."""
+        return v.replace("\\", r"\\").replace("\n", r"\n")
+
     def render_prometheus(self, namespace: str = "prefillonly") -> str:
         """Prometheus text exposition format, scrape-ready.
 
@@ -245,6 +276,7 @@ class MetricsRegistry:
         """
         with self._lock:
             items = sorted(self._m.items())
+            help_texts = dict(self._help)
         by_name: Dict[Tuple[str, str], List[Tuple[str, object]]] = {}
         for (kind, name, inst), m in items:
             by_name.setdefault((kind, name), []).append((inst, m))
@@ -253,6 +285,9 @@ class MetricsRegistry:
             full = f"{namespace}_{name}"
             ptype = {"counter": "counter", "gauge": "gauge",
                      "state": "gauge", "hist": "histogram"}[kind]
+            htext = help_texts.get(name)
+            if htext:
+                out.append(f"# HELP {full} {self._escape_help(htext)}")
             out.append(f"# TYPE {full} {ptype}")
             for inst, m in series:
                 esc = self._escape_label(inst)

@@ -79,6 +79,7 @@ from repro.serving.admission import (AdmissionController, BrownoutController,
                                      Rejected)
 from repro.serving.metrics import MetricsRegistry
 from repro.serving.router import UserHashRouter
+from repro.serving.tracing import SpanTracer
 
 
 @dataclasses.dataclass
@@ -136,7 +137,8 @@ class AsyncServer:
                  metrics: Optional[MetricsRegistry] = None,
                  retry: Optional[RetryPolicy] = None,
                  watchdog: Optional[JCTDeadlineWatchdog] = None,
-                 brownout: Optional[BrownoutController] = None):
+                 brownout: Optional[BrownoutController] = None,
+                 tracer: Optional[SpanTracer] = None):
         self.pool = pool
         self.router = router or UserHashRouter()
         self.admission = admission
@@ -146,6 +148,14 @@ class AsyncServer:
         self.retry = RetryPolicy() if retry is None else retry
         self.watchdog = watchdog
         self.brownout = brownout
+        # request-lifecycle tracing (None = zero overhead). Every retry /
+        # watchdog / brownout / re-home decision lands as an event on the
+        # affected requests' timelines; engines bound via bind_telemetry
+        # add queue/execute/score spans and BatchRecords.
+        self.tracer = tracer
+        if tracer is not None:
+            pool.on_rehome = lambda rid, src, dst: tracer.event_rid(
+                rid, "rehome", src=src, dst=dst)
         self._futures: Dict[int, Future] = {}
         self._early: Dict[int, object] = {}   # results that beat registration
         self._tracked: Dict[int, _Tracked] = {}
@@ -161,8 +171,19 @@ class AsyncServer:
         self._accepting = False
 
     # ---- lifecycle -------------------------------------------------------
+    def _bind_engines(self) -> None:
+        """Attach registry + tracer to every live engine (idempotent; test
+        fakes without bind_telemetry are skipped). ChaosEngine proxies the
+        call through to the wrapped engine."""
+        for name in self.pool.live_names():
+            bind = getattr(self.pool.engines.get(name), "bind_telemetry",
+                           None)
+            if bind is not None:
+                bind(metrics=self.metrics, instance=name, tracer=self.tracer)
+
     def start(self) -> "AsyncServer":
         self._accepting = True
+        self._bind_engines()
         for name in self.pool.live_names():
             self._start_worker(name)
         if (self.watchdog is not None or self.brownout is not None) \
@@ -188,6 +209,7 @@ class AsyncServer:
         the pool could not re-home resolve as ``Rejected`` (mirroring
         ``mark_failed``) instead of hanging their futures."""
         dropped = self.pool.scale_to(names)
+        self._bind_engines()
         for name in self.pool.live_names():
             self._start_worker(name)
         for r in dropped:
@@ -257,48 +279,69 @@ class AsyncServer:
         fault into a hard rejection)."""
         fut = Future()
         fut.set_running_or_notify_cancel()
-        if not self._accepting:
-            fut.set_result(Rejected("shutdown", "server not accepting",
-                                    user_id=user_id))
-            return fut
-        if self.brownout is not None and self.brownout.level >= 3:
-            rej = Rejected("brownout", "pool shedding load (brownout "
-                           "level 3)", user_id=user_id)
-            self._count_rejection(rej)
+        sp = self.tracer
+        ctx = (sp.begin(user_id=user_id, n_input=len(tokens),
+                        deadline=deadline) if sp is not None else None)
+
+        def _early_reject(rej: Rejected, count: bool = True) -> "Future":
+            if count:
+                self._count_rejection(rej)
+            if sp is not None:
+                sp.finish(ctx, f"rejected:{rej.reason}",
+                          detail=rej.detail or "")
             fut.set_result(rej)
             return fut
+
+        if not self._accepting:
+            return _early_reject(Rejected("shutdown", "server not accepting",
+                                          user_id=user_id), count=False)
+        if self.brownout is not None and self.brownout.level >= 3:
+            return _early_reject(Rejected(
+                "brownout", "pool shedding load (brownout level 3)",
+                user_id=user_id))
         live = {n: self.pool.engines[n] for n in self.pool.live_names()}
         if not live:
-            rej = Rejected("no_instances", user_id=user_id)
-            self._count_rejection(rej)
-            fut.set_result(rej)
-            return fut
+            return _early_reject(Rejected("no_instances", user_id=user_id))
         chains = self._cut_chains(tokens, live)
         routed = self.router.route(user_id=user_id, n_input=len(tokens),
                                    chain=next(iter(chains.values())),
                                    instances=live, chains=chains)
         eng = live[routed]
         arrival = time.perf_counter()
+        # routed-instance probe values: admission consumes them, and the
+        # route decision is only auditable with the numbers it was made on.
+        # Probe only when someone needs them — the untraced/no-admission
+        # fast path must not pay two extra engine-lock acquisitions.
+        pending = predicted = None
+        if self.admission is not None or ctx is not None:
+            pending = eng.pending_jct()
+            predicted = eng.predict_jct(len(tokens),
+                                        chains[eng.ecfg.block_size])
+        if ctx is not None:
+            sp.event(ctx, "route", instance=routed,
+                     router=type(self.router).__name__,
+                     pending_jct=pending, predicted_jct=predicted)
         if self.admission is not None:
-            rej = self.admission.check(
-                len(tokens), deadline, arrival, eng.pending_jct(),
-                eng.predict_jct(len(tokens),
-                                chains[eng.ecfg.block_size]),
-                user_id=user_id)
+            rej = self.admission.check(len(tokens), deadline, arrival,
+                                       pending, predicted, user_id=user_id)
+            if ctx is not None:
+                sp.event(ctx, "admission",
+                         verdict="reject" if rej is not None else "admit",
+                         reason=getattr(rej, "reason", None),
+                         pending_jct=pending, predicted_jct=predicted)
             if rej is not None:
-                self._count_rejection(rej)
-                fut.set_result(rej)
-                return fut
+                return _early_reject(rej)
         got = self._enqueue(live, routed, tokens, chains, user_id=user_id,
                             allowed_tokens=allowed_tokens, deadline=deadline,
                             arrival=arrival)
         if got is None:
-            rej = Rejected("error", "enqueue failed on every live instance",
-                           user_id=user_id)
-            self._count_rejection(rej)
-            fut.set_result(rej)
-            return fut
+            return _early_reject(Rejected(
+                "error", "enqueue failed on every live instance",
+                user_id=user_id))
         name, rid = got
+        if ctx is not None:
+            sp.bind(ctx, rid)
+            sp.event(ctx, "enqueue", instance=name, req_id=rid)
         with self._lock:
             early = self._early.pop(rid, None)
             if early is None:
@@ -315,6 +358,9 @@ class AsyncServer:
         # must, so _start_worker can hand it over
         self._events.setdefault(name, threading.Event()).set()
         if early is not None:        # worker finished before we registered
+            if ctx is not None:
+                sp.finish(ctx, f"rejected:{early.reason}"
+                          if isinstance(early, Rejected) else "delivered")
             fut.set_result(early)
             return fut
         # close the enqueue-vs-failure race: if the instance was failed (or
@@ -366,15 +412,22 @@ class AsyncServer:
         """
         with self._lock:
             if self._moved.pop(rid, None) is not None:
+                if self.tracer is not None:
+                    self.tracer.postmortem_rid(rid, "tombstone_drop")
                 return "dropped"
             fut = self._futures.pop(rid, None)
             if fut is None:
                 # submit() hasn't registered the future yet — park the result
+                # (submit finishes the trace at registration)
                 self._early[rid] = result
                 return "parked"
             self._tracked.pop(rid, None)
             self._outstanding -= 1
             self._cond.notify_all()
+        if self.tracer is not None:
+            self.tracer.finish_rid(
+                rid, f"rejected:{result.reason}"
+                if isinstance(result, Rejected) else "delivered")
         fut.set_result(result)
         return "delivered"
 
@@ -394,6 +447,9 @@ class AsyncServer:
             if rid in self._moved or rid not in self._futures:
                 return                  # already resolved or confiscated
             tr = self._tracked.get(rid)
+        sp = self.tracer
+        if sp is not None:
+            sp.event_rid(rid, "lost", cause=cause, instance=exclude)
         pol = self.retry
         if tr is None or pol is None or pol.budget <= 0:
             self._reject(rid, Rejected("error", cause, req_id=rid,
@@ -462,6 +518,13 @@ class AsyncServer:
                 if early is None:
                     self._futures[new_rid] = fut
                     self._tracked[new_rid] = tr
+        if fut is not None and sp is not None:
+            # the replacement rid joins the original timeline; the old rid
+            # stays mapped so the confiscated attempt's late result still
+            # lands here (as a tombstone_drop event)
+            sp.rebind(rid, new_rid)
+            sp.event_rid(new_rid, "retry", attempt=tr.attempts,
+                         from_rid=rid, instance=new_name, cause=cause)
         if fut is None:
             # rid resolved while we were re-submitting (a late result won
             # the race) — the replacement is a duplicate: reclaim it, and
@@ -514,6 +577,11 @@ class AsyncServer:
                 continue
             wd.trips += 1
             self.metrics.counter("watchdog_trips", name).inc()
+            if self.tracer is not None:
+                for rid in ids:
+                    self.tracer.event_rid(rid, "watchdog_trip",
+                                          instance=name, elapsed=elapsed,
+                                          batch_deadline=deadline)
             self.mark_failed(name)
             for rid in ids:
                 self._handle_lost(rid, exclude=name,
@@ -539,6 +607,11 @@ class AsyncServer:
         if level == self._brownout_applied:
             return
         prev, self._brownout_applied = self._brownout_applied, level
+        if self.tracer is not None:
+            # a brownout transition affects every in-flight request
+            self.tracer.broadcast(
+                "brownout", level=level, prev=prev,
+                state=BrownoutController.LEVELS[level])
         m = self.metrics
         m.gauge("brownout_level").set(level)
         m.state_gauge("brownout_state", BrownoutController.LEVELS).set(level)
@@ -676,6 +749,10 @@ class AsyncServer:
                     # corruption re-runs clean, persistent corruption
                     # exhausts the budget into Rejected("error"))
                     m.counter("results_quarantined", name).inc()
+                    if self.tracer is not None:
+                        self.tracer.event_rid(
+                            rid2, "quarantine", instance=name,
+                            corrupt=res.get("corrupt") or "nan in scores")
                     self._handle_lost(
                         rid2, exclude=name,
                         cause=f"non-finite score quarantined "
@@ -705,6 +782,8 @@ class AsyncServer:
                                if self.brownout is not None else 0),
             "latency": self.metrics.merged_histogram(
                 "latency_seconds").summary(),
+            "tracer": (self.tracer.stats()
+                       if self.tracer is not None else None),
             "per_instance": {n: self.pool.engines[n].stats()
                              for n in self.pool.live_names()},
         }

@@ -1,0 +1,186 @@
+"""Prometheus text-exposition conformance for the serving MetricsRegistry.
+
+The scrape payload is parsed with the same STRICT parser the CI serve-smoke
+uses (``repro.launch.smoke``): HELP/TYPE comments, sample/label syntax,
+cumulative ``le`` buckets terminated by ``+Inf``, ``_sum``/``_count``
+consistency, one 0/1 series per StateGauge state. Concurrency soaks pin the
+thread-safety contract: writer threads and scraping readers never corrupt a
+value or produce an unparseable payload.
+"""
+import math
+import threading
+
+import pytest
+
+from repro.launch.smoke import parse_prometheus, validate_histograms
+from repro.serving.metrics import (DEFAULT_BUCKETS, Gauge, MetricsRegistry,
+                                   StateGauge)
+
+
+def test_help_and_type_comments():
+    reg = MetricsRegistry()
+    reg.counter("requests_served", help="Requests resolved with a result")
+    reg.gauge("queue_depth", "i0", help="Queued requests per instance")
+    text = reg.render_prometheus()
+    assert ("# HELP prefillonly_requests_served "
+            "Requests resolved with a result") in text
+    assert "# TYPE prefillonly_requests_served counter" in text
+    assert "# TYPE prefillonly_queue_depth gauge" in text
+    # HELP precedes TYPE for the same family
+    lines = text.splitlines()
+    h = lines.index("# HELP prefillonly_queue_depth "
+                    "Queued requests per instance")
+    assert lines[h + 1] == "# TYPE prefillonly_queue_depth gauge"
+    parse_prometheus(text)                   # strict parse passes
+
+
+def test_help_first_writer_wins_and_is_escaped():
+    reg = MetricsRegistry()
+    reg.describe("odd", "line1\nline2 with \\ backslash")
+    reg.describe("odd", "a later, different help text")
+    reg.counter("odd").inc()
+    text = reg.render_prometheus()
+    assert r"# HELP prefillonly_odd line1\nline2 with \\ backslash" in text
+    assert "a later, different help text" not in text
+    parse_prometheus(text)
+
+
+def test_label_escaping_round_trips_strict_parser():
+    reg = MetricsRegistry()
+    nasty = 'in"st\\ance\nwith everything'
+    reg.counter("requests_served", nasty).inc(3)
+    text = reg.render_prometheus()
+    assert r'instance="in\"st\\ance\nwith everything"' in text
+    series = parse_prometheus(text)
+    (s,) = series["prefillonly_requests_served"]
+    assert s["value"] == 3.0
+
+
+def test_histogram_exposition_cumulative_and_consistent():
+    reg = MetricsRegistry(buckets=(0.1, 1.0, 10.0))
+    h = reg.histogram("jct_residual_seconds", "i0")
+    for v in (0.05, 0.5, 0.5, 5.0, 50.0):    # one lands past the last edge
+        h.observe(v)
+    text = reg.render_prometheus()
+    series = parse_prometheus(text)
+    fams = validate_histograms(series)       # cumulative + _sum/_count check
+    assert fams == ["prefillonly_jct_residual_seconds"]
+    buckets = series["prefillonly_jct_residual_seconds_bucket"]
+    assert [b["labels"]["le"] for b in buckets] == \
+        ["0.1", "1", "10", "+Inf"]
+    assert [b["value"] for b in buckets] == [1, 3, 4, 5]
+    (cnt,) = series["prefillonly_jct_residual_seconds_count"]
+    (ssum,) = series["prefillonly_jct_residual_seconds_sum"]
+    assert cnt["value"] == 5 and ssum["value"] == pytest.approx(56.05)
+    assert cnt["labels"] == {"instance": "i0"}
+
+
+def test_default_bucket_table_renders_parseable():
+    reg = MetricsRegistry()
+    reg.histogram("latency_seconds").observe(0.123)
+    series = parse_prometheus(reg.render_prometheus())
+    validate_histograms(series)
+    # 26 finite edges + +Inf
+    assert len(series["prefillonly_latency_seconds_bucket"]) == \
+        len(DEFAULT_BUCKETS) + 1
+
+
+def test_state_gauge_one_series_per_state():
+    reg = MetricsRegistry()
+    sg = reg.state_gauge("brownout_state",
+                         ("normal", "tighten", "degrade", "shed"), "i0")
+    sg.set(2)
+    series = parse_prometheus(reg.render_prometheus())
+    rows = series["prefillonly_brownout_state"]
+    by_state = {r["labels"]["state"]: r["value"] for r in rows}
+    assert by_state == {"normal": 0, "tighten": 0, "degrade": 1, "shed": 0}
+    assert all(r["labels"]["instance"] == "i0" for r in rows)
+    assert sg.state == "degrade"
+
+
+def test_aggregate_instance_renders_unlabelled():
+    reg = MetricsRegistry()
+    reg.counter("requests_served").inc(2)             # global view
+    reg.counter("requests_served", "i0").inc(5)
+    series = parse_prometheus(reg.render_prometheus())
+    rows = series["prefillonly_requests_served"]
+    assert {frozenset(r["labels"].items()): r["value"]
+            for r in rows} == {frozenset(): 2.0,
+                               frozenset({("instance", "i0")}): 5.0}
+    assert reg.total("requests_served") == 7.0
+
+
+def test_gauge_add_is_atomic_under_threads():
+    g = Gauge()
+    n, per = 8, 2000
+
+    def worker():
+        for _ in range(per):
+            g.add(1.0)
+
+    threads = [threading.Thread(target=worker) for _ in range(n)]
+    [t.start() for t in threads]
+    [t.join() for t in threads]
+    assert g.value == n * per                # no torn read-modify-write
+
+
+def test_state_gauge_set_under_threads_stays_in_range():
+    sg = StateGauge(("a", "b", "c"))
+    stop = threading.Event()
+
+    def flipper(i):
+        while not stop.is_set():
+            sg.set(i)
+
+    threads = [threading.Thread(target=flipper, args=(i,)) for i in range(3)]
+    [t.start() for t in threads]
+    for _ in range(2000):
+        assert sg.state in ("a", "b", "c")
+    stop.set()
+    [t.join() for t in threads]
+
+
+def test_registry_readers_vs_writers_soak():
+    """Writers hammer counters/gauges/histograms on several instance labels
+    while readers scrape continuously: every scrape must parse strictly and
+    the final totals must be exact."""
+    reg = MetricsRegistry(buckets=(0.01, 0.1, 1.0))
+    reg.describe("requests_served", "served")
+    n_writers, per = 4, 1500
+    errors = []
+    stop = threading.Event()
+
+    def writer(k):
+        inst = f"i{k % 2}"
+        for j in range(per):
+            reg.counter("requests_served", inst).inc()
+            reg.gauge("queue_depth", inst).add(1.0)
+            reg.histogram("latency_seconds", inst).observe(0.001 * (j % 7))
+            reg.state_gauge("brownout_state", ("normal", "shed"),
+                            inst).set(j % 2)
+
+    def reader():
+        while not stop.is_set():
+            try:
+                series = parse_prometheus(reg.render_prometheus())
+                validate_histograms(series)
+                reg.render()
+            except Exception as e:           # surfaced after join
+                errors.append(e)
+                return
+
+    ws = [threading.Thread(target=writer, args=(k,))
+          for k in range(n_writers)]
+    rs = [threading.Thread(target=reader) for _ in range(2)]
+    [t.start() for t in rs]
+    [t.start() for t in ws]
+    [t.join() for t in ws]
+    stop.set()
+    [t.join() for t in rs]
+    assert not errors, errors
+    assert reg.total("requests_served") == n_writers * per
+    assert sum(g.value for _, g in reg._named("gauge", "queue_depth")) == \
+        n_writers * per
+    merged = reg.merged_histogram("latency_seconds")
+    assert merged.count == n_writers * per and math.isfinite(merged.sum)
+    parse_prometheus(reg.render_prometheus())

@@ -1,0 +1,285 @@
+"""Request-lifecycle tracing + JCT-calibration observability plane.
+
+Covers the ISSUE 7 acceptance surface that is testable without a real
+model: ring-buffer bounds, deterministic sampling, the orphan buffer,
+retry rebind (late results land on the SAME timeline), Chrome-trace
+nesting, and — through the chaos fakes — retry / watchdog / brownout
+events appearing on the affected requests' timelines. The calibration
+monitor's drift detector and Prometheus export are exercised against the
+real ``LinearProxyJCT``.
+"""
+import json
+import time
+
+import pytest
+
+from repro.core.jct import LinearProxyJCT
+from repro.launch.smoke import (parse_prometheus, validate_chrome,
+                                validate_trace_jsonl)
+from repro.runtime.fault_tolerance import JCTDeadlineWatchdog
+from repro.serving import (AdmissionController, AsyncServer, BatchRecord,
+                           BrownoutController, ChaosConfig, FaultPlan,
+                           JCTCalibrationMonitor, Rejected, RetryPolicy,
+                           SpanTracer)
+from repro.serving.metrics import MetricsRegistry
+from test_chaos import FirstRouter, _pool
+
+
+# ---- ring / sampling / orphan bounds ----------------------------------------
+
+def test_ring_bounds_and_counters():
+    tr = SpanTracer(capacity=4)
+    for i in range(10):
+        ctx = tr.begin(rid=i, user_id=f"u{i}")
+        tr.finish(ctx, "delivered")
+    s = tr.stats()
+    assert s["begun"] == 10 and s["finished"] == 10
+    assert s["retained"] == 4 and s["active"] == 0
+    kept = [r["req_id"] for r in tr.snapshot()]
+    assert kept == [6, 7, 8, 9]              # oldest fell off the ring
+
+
+def test_sampling_is_deterministic_and_no_op():
+    tr = SpanTracer(sample=0.25)
+    ctxs = [tr.begin() for _ in range(20)]
+    live = [c for c in ctxs if c != SpanTracer._NOSAMPLE]
+    assert len(live) == 5                    # every 4th, not probabilistic
+    # unsampled contexts are no-ops end to end, never raising
+    dead = next(c for c in ctxs if c == SpanTracer._NOSAMPLE)
+    tr.event(dead, "route")
+    tr.bind(dead, 99)
+    tr.finish(dead, "delivered")
+    s = tr.stats()
+    assert s["sampled_out"] == 15 and s["begun"] == 5
+    assert s["finished"] == 0 and 99 not in tr._by_rid
+
+
+def test_orphan_buffer_merges_at_bind():
+    tr = SpanTracer()
+    # the engine can touch a rid before submit() finished binding it
+    tr.event_rid(7, "batch", kind="miss")
+    tr.span_rid(7, "execute", 1.0, 2.0, pack="miss")
+    tr.event_rid(8, "batch")                 # different rid: must stay
+    assert tr.stats()["orphaned"] == 3
+    ctx = tr.begin(rid=7)
+    assert tr.stats()["orphaned"] == 1       # rid-7 events merged
+    tr.finish(ctx, "delivered")
+    rec = tr.snapshot()[0]
+    assert [e["name"] for e in rec["events"]] == ["submit", "batch",
+                                                  "finish"]
+    (sp,) = rec["spans"]
+    assert (sp["name"], sp["t0"], sp["t1"], sp["pack"]) == \
+        ("execute", 1.0, 2.0, "miss")
+
+
+def test_orphan_buffer_is_bounded():
+    tr = SpanTracer(orphan_capacity=4)
+    for i in range(10):
+        tr.event_rid(1000 + i, "batch")
+    assert tr.stats()["orphaned"] == 4
+
+
+def test_rebind_keeps_old_rid_on_same_timeline():
+    tr = SpanTracer()
+    tr.begin(rid=1, user_id="u")
+    tr.rebind(1, 2)                          # retry re-keyed the request
+    tr.event_rid(2, "retry", attempt=1)
+    tr.event_rid(1, "tombstone_drop")        # late result of the old attempt
+    tr.finish_rid(2, "delivered")
+    (rec,) = tr.snapshot()
+    assert rec["rids"] == [1, 2] and rec["attempts"] == 2
+    names = [e["name"] for e in rec["events"]]
+    assert names == ["submit", "retry", "tombstone_drop", "finish"]
+    # finish unmapped BOTH rids; later events orphan instead of resurrecting
+    tr.event_rid(1, "stale")
+    assert tr.stats()["orphaned"] == 1
+
+
+def test_broadcast_hits_only_active_traces():
+    tr = SpanTracer()
+    done = tr.begin(rid=1)
+    tr.finish(done, "delivered")
+    live = tr.begin(rid=2)
+    tr.broadcast("brownout", level=2)
+    tr.finish(live, "delivered")
+    recs = {r["req_id"]: r for r in tr.snapshot()}
+    assert "brownout" in [e["name"] for e in recs[2]["events"]]
+    assert "brownout" not in [e["name"] for e in recs[1]["events"]]
+
+
+# ---- export formats ---------------------------------------------------------
+
+def _one_full_trace(tr, rid=5, instance="i0"):
+    # span timestamps must sit INSIDE [begin, finish] for the Perfetto
+    # nesting check, so capture t after begin and sleep past the last span
+    ctx = tr.begin(rid=rid, user_id="u", n_input=40)
+    t = time.perf_counter()
+    tr.event(ctx, "route", instance=instance, predicted_jct=0.01)
+    tr.event(ctx, "enqueue", instance=instance, req_id=rid)
+    time.sleep(0.005)
+    tr.span_rid(rid, "queue", t, t + 0.001, instance=instance)
+    tr.span_rid(rid, "execute", t + 0.001, t + 0.003, instance=instance,
+                pack="solo")
+    tr.record_batch(BatchRecord(step=0, ts=t + 0.003, instance=instance,
+                                kind="solo", req_ids=(rid,),
+                                computed_tokens=40, padded_tokens=64,
+                                S=64, jit_path="fresh", jit_key=(64, True),
+                                compiled=True, predicted_jct=0.01,
+                                wall=0.002))
+    tr.finish(ctx, "delivered")
+
+
+def test_dump_jsonl_round_trips_and_validates():
+    tr = SpanTracer()
+    _one_full_trace(tr)
+    text = tr.dump_jsonl()
+    rows = [json.loads(line) for line in text.splitlines()]
+    assert [r["type"] for r in rows] == ["request", "batch"]
+    rec = validate_trace_jsonl(text)         # the CI smoke's strict check
+    assert rec["outcome"] == "delivered" and rec["req_id"] == 5
+    assert rows[1]["padding_waste"] == pytest.approx(1 - 40 / 64)
+
+
+def test_chrome_trace_nests_phases_inside_request():
+    tr = SpanTracer()
+    _one_full_trace(tr)
+    obj = tr.chrome_trace()
+    json.dumps(obj)                          # serializable
+    assert validate_chrome(obj) == 2         # queue + execute nested
+    names = {e["name"] for e in obj["traceEvents"]}
+    assert {"request delivered", "queue", "execute", "step solo",
+            "process_name", "thread_name"} <= names
+
+
+def test_batch_record_padding_waste_edges():
+    assert BatchRecord(step=0, ts=0.0).padding_waste == 0.0
+    b = BatchRecord(step=0, ts=0.0, computed_tokens=100, padded_tokens=80)
+    assert b.padding_waste == 0.0            # clamped, never negative
+    d = BatchRecord(step=1, ts=0.0, computed_tokens=30,
+                    padded_tokens=120).to_dict()
+    assert d["type"] == "batch" and d["padding_waste"] == 0.75
+
+
+# ---- JCT calibration monitor ------------------------------------------------
+
+def test_jct_monitor_exports_histograms_and_coefficients():
+    model = LinearProxyJCT(a=1e-3, b=0.01)
+    mon = JCTCalibrationMonitor(model, buckets=(64, 256))
+    reg = MetricsRegistry()
+    mon.bind(reg, "i0")
+    # gauges present from bind — a scrape before any warm step sees the fit
+    assert reg.gauge("jct_coef_a", "i0").value == pytest.approx(1e-3)
+    for n in (40, 40, 200, 200):
+        mon.observe(model.predict(n), model.predict(n) + 0.002, n)
+    series = parse_prometheus(reg.render_prometheus())
+    assert "prefillonly_jct_residual_seconds_bucket" in series
+    assert "prefillonly_jct_relative_error_bucket" in series
+    s = mon.summary()
+    assert s["observed"] == 4 and set(s["by_bucket"]) == {64, 256}
+    assert s["residual_p50"] == pytest.approx(0.002, rel=1e-6)
+    assert s["a"] == pytest.approx(1e-3)
+
+
+def test_jct_monitor_drift_triggers_refit():
+    # model whose sliding window holds the TRUE relationship but whose
+    # current coefficients are badly stale (10x) — predictions will miss
+    # until the drift detector forces a refit from the window
+    model = LinearProxyJCT(a=1e-3, b=0.0, refit_every=10_000)
+    model._recent = [(n, 0, 1e-4 * n) for n in range(50, 300, 10)]
+    mon = JCTCalibrationMonitor(model, window=32, drift_threshold=0.5,
+                                drift_min=8, cooldown=16)
+    reg = MetricsRegistry()
+    mon.bind(reg, "i0")
+    for _ in range(16):
+        mon.observe(model.predict(100), 1e-4 * 100, 100)   # ~10x over
+    assert mon.drift_refits == 1
+    assert model.a == pytest.approx(1e-4, rel=1e-6)        # refit corrected
+    assert reg.counter("jct_drift_refits", "i0").value == 1
+    assert reg.gauge("jct_coef_a", "i0").value == pytest.approx(1e-4)
+    # cooldown: the very next bad sample cannot refit again immediately
+    mon.observe(10.0, 1.0, 100)
+    assert mon.drift_refits == 1
+
+
+# ---- chaos events land on the affected timelines ----------------------------
+
+def _traced_server(pool, **kw):
+    tracer = SpanTracer()
+    srv = AsyncServer(pool, router=FirstRouter(),
+                      retry=kw.pop("retry", RetryPolicy(budget=2,
+                                                        backoff=0.0)),
+                      tracer=tracer, **kw).start()
+    return srv, tracer
+
+
+def _timeline(tracer):
+    recs = tracer.snapshot(include_active=True)
+    assert len(recs) == 1
+    return recs[0], [e["name"] for e in recs[0]["events"]]
+
+
+def test_retry_events_on_timeline():
+    plan = FaultPlan(ChaosConfig(schedule=[("i0", 0, "step_error")]))
+    srv, tracer = _traced_server(_pool(2, plan))
+    res = srv.submit("u", list(range(40))).result(timeout=10)
+    assert not isinstance(res, Rejected)
+    rec, names = _timeline(tracer)
+    assert rec["outcome"] == "delivered" and rec["attempts"] == 2
+    for needed in ("submit", "route", "enqueue", "lost", "retry", "finish"):
+        assert needed in names, (needed, names)
+    retry = next(e for e in rec["events"] if e["name"] == "retry")
+    assert retry["instance"] == "i1" and retry["from_rid"] in rec["rids"]
+    srv.shutdown(drain=True, timeout=5)
+
+
+def test_watchdog_trip_and_tombstone_drop_on_timeline():
+    plan = FaultPlan(ChaosConfig(schedule=[("i0", 0, "hang")],
+                                 hang_seconds=0.8))
+    wd = JCTDeadlineWatchdog(factor=4.0, min_deadline=0.12, interval=0.02)
+    srv, tracer = _traced_server(_pool(2, plan), watchdog=wd)
+    res = srv.submit("u", list(range(40))).result(timeout=10)
+    assert not isinstance(res, Rejected)
+    deadline = time.monotonic() + 5          # wait for the late harvest
+    while (srv.metrics.total("late_results_dropped") < 1
+           and time.monotonic() < deadline):
+        time.sleep(0.02)
+    rec, names = _timeline(tracer)
+    assert rec["outcome"] == "delivered"
+    for needed in ("watchdog_trip", "retry", "tombstone_drop"):
+        assert needed in names, (needed, names)
+    trip = next(e for e in rec["events"] if e["name"] == "watchdog_trip")
+    assert trip["instance"] == "i0" and trip["elapsed"] > 0
+    # event order tells the story: trip -> retry -> late drop
+    assert names.index("watchdog_trip") < names.index("retry") \
+        < names.index("tombstone_drop")
+    srv.shutdown(drain=True, timeout=5)
+
+
+def test_brownout_transition_and_rejection_on_timelines():
+    b = BrownoutController(enter=(0.2, 0.5, 1.0), exit=(0.05, 0.1, 0.2),
+                           hold=2, slack_factor=1.5)
+    srv, tracer = _traced_server(_pool(2, sec_per_token=0.004),
+                                 brownout=b,
+                                 admission=AdmissionController(adapt=False))
+    futs = [srv.submit(f"u{i}", list(range(100))) for i in range(12)]
+    deadline = time.monotonic() + 5
+    while b.level < 3 and time.monotonic() < deadline:
+        time.sleep(0.01)
+    assert b.level == 3
+    late = srv.submit("u-late", list(range(100)))
+    rej = late.result(timeout=2)
+    assert isinstance(rej, Rejected) and rej.reason == "brownout"
+    assert srv.drain(timeout=30)
+    recs = tracer.snapshot()
+    # in-flight requests saw the brownout transition as an event...
+    touched = [r for r in recs if any(e["name"] == "brownout"
+                                      for e in r["events"])]
+    assert touched, "no timeline recorded the brownout transition"
+    lv = next(e for r in touched for e in r["events"]
+              if e["name"] == "brownout")
+    assert lv["state"] in BrownoutController.LEVELS
+    # ...and the shed request's own timeline records its rejection
+    shed = [r for r in recs if r["outcome"] == "rejected:brownout"]
+    assert len(shed) == 1 and shed[0]["user_id"] == "u-late"
+    assert all(f.done() for f in futs)
+    srv.shutdown(drain=True, timeout=5)
