@@ -1,17 +1,24 @@
 """Fault-injection benchmark: retry + watchdog + brownout vs a no-retry
 baseline, on REAL reduced-config engines (ISSUE 6 acceptance artifact).
 
-Three scenarios replay the same trace through 3-instance pools:
+Four scenarios replay the same trace through 3-instance pools:
 
-  clean        no faults injected — the healthy reference for served% / p99
-  no_retry     a deterministic schedule of all five fault kinds (step crash,
-               hang, straggler, NaN corruption, transient submit failure)
-               with ``retry_budget=0``: lost in-flight work resolves
-               ``Rejected("error")``; the JCT watchdog still trips hangs so
-               nothing blocks forever, but nothing is re-served either
-  retry        the same fault schedule with idempotent retry (budget 3),
-               the watchdog, and the brownout ladder armed — lost work is
-               transparently re-served on healthy peers
+  clean          no faults injected — the healthy reference for served%/p99
+  no_retry       a deterministic schedule of all five fault kinds (step
+                 crash, hang, straggler, NaN corruption, transient submit
+                 failure) with ``retry_budget=0``: lost in-flight work
+                 resolves ``Rejected("error")``; the JCT watchdog still
+                 trips hangs so nothing blocks forever, but nothing is
+                 re-served either
+  retry          the same fault schedule with idempotent retry (budget 3),
+                 the watchdog, and the brownout ladder armed — lost work is
+                 transparently re-served on healthy peers
+  process_chaos  PROCESS mode (``workers=3`` supervised engine worker
+                 processes behind the RPC boundary) under a deterministic
+                 SIGKILL-mid-batch + long SIGSTOP freeze schedule against
+                 the real worker pids — recovery is shadow-queue re-home +
+                 idempotent retry + heartbeat-lease death detection +
+                 supervised restart
 
 The committed output (``benchmarks/results/BENCH_serving_faults.json``)
 records per-scenario served/rejected counts, retries, watchdog trips, the
@@ -49,16 +56,32 @@ FAULT_SCHEDULE = (
     ("inst1", 3, "hang"),
 )
 
+# process-mode faults against REAL worker processes: a SIGKILL mid-batch
+# (kernel-guaranteed, no Python cleanup) and a SIGSTOP freeze long enough
+# that the supervisor must declare the lease dead (~6s at the serve-CLI
+# supervision constants) and kill/restart the worker — not a transient
+# stall that merely slows one RPC
+PROCESS_FAULT_SCHEDULE = (
+    ("inst0", 1, "kill"),
+    ("inst1", 2, "freeze"),
+)
+
 
 def _chaos() -> ChaosConfig:
     return ChaosConfig(seed=0, schedule=FAULT_SCHEDULE,
                        hang_seconds=6.0, straggler_seconds=0.25)
 
 
-def _scenario(name: str, *, chaos, retry_budget, brownout, n_requests, qps):
+def _process_chaos() -> ChaosConfig:
+    return ChaosConfig(seed=0, schedule=PROCESS_FAULT_SCHEDULE,
+                       freeze_seconds=10.0)
+
+
+def _scenario(name: str, *, chaos, retry_budget, brownout, n_requests, qps,
+              workers: int = 0):
     t0 = time.perf_counter()
     out = serve_trace(
-        ARCH, TRACE, qps=qps, n_instances=INSTANCES,
+        ARCH, TRACE, qps=qps, n_instances=INSTANCES, workers=workers,
         max_requests=n_requests, scale_tokens=0.02, deadline=None,
         profile=True,                       # warm compiles + fitted JCT
         retry_budget=retry_budget, watchdog=True, watchdog_factor=3.0,
@@ -66,6 +89,7 @@ def _scenario(name: str, *, chaos, retry_budget, brownout, n_requests, qps):
         drain_timeout=120.0)
     return {
         "scenario": name,
+        "mode": "process" if workers else "thread",
         "requests": out["requests"],
         "served": out["served"],
         "rejected": out["rejected"],
@@ -95,6 +119,11 @@ def run(n_requests: int, qps: float) -> dict:
                   n_requests=n_requests, qps=qps),
         _scenario("retry", chaos=_chaos(), retry_budget=3, brownout=True,
                   n_requests=n_requests, qps=qps),
+        # same recovery stack, but the engines are supervised worker
+        # PROCESSES and the faults are SIGKILL/SIGSTOP against real pids
+        _scenario("process_chaos", chaos=_process_chaos(), retry_budget=3,
+                  brownout=True, n_requests=n_requests, qps=qps,
+                  workers=INSTANCES),
     ]
     by = {r["scenario"]: r for r in rows}
     return {
@@ -105,6 +134,7 @@ def run(n_requests: int, qps: float) -> dict:
         "requests_per_scenario": n_requests,
         "qps": qps,
         "fault_schedule": [list(f) for f in FAULT_SCHEDULE],
+        "process_fault_schedule": [list(f) for f in PROCESS_FAULT_SCHEDULE],
         "scenarios": rows,
         "comparison": {
             "served_frac_clean": by["clean"]["served"]
@@ -117,6 +147,8 @@ def run(n_requests: int, qps: float) -> dict:
             / max(1e-9, by["clean"]["p99_latency"]),
             "p99_retry_over_clean": by["retry"]["p99_latency"]
             / max(1e-9, by["clean"]["p99_latency"]),
+            "served_frac_process_chaos": by["process_chaos"]["served"]
+            / max(1, by["process_chaos"]["requests"]),
         },
     }
 
@@ -147,7 +179,8 @@ def main():
         "serving_faults",
         config={k: result.pop(k) for k in
                 ("arch", "trace", "instances", "requests_per_scenario",
-                 "qps", "fault_schedule") if k in result},
+                 "qps", "fault_schedule", "process_fault_schedule")
+                if k in result},
         rows=result.pop("scenarios", []),
         **result)
     write_bench_json(record, out_path)

@@ -327,6 +327,17 @@ class PrefillOnlyEngine:
         with self.lock:
             return self.cache.match_len(chain)
 
+    def probe(self, n_input: int,
+              chain: Tuple[int, ...] = ()) -> Tuple[float, float, int]:
+        """All three router probes — ``(pending_jct, predict_jct,
+        cached_prefix_len)`` — in ONE lock acquisition. The RPC worker
+        plane serves a router scan as a single round trip through this
+        instead of three, and in-process callers get the same atomicity
+        (the three values describe one consistent cache/queue state)."""
+        with self.lock:
+            return (self.pending_jct(), self.predict_jct(n_input, chain),
+                    self.cache.match_len(chain))
+
     @property
     def last_step_ids(self) -> List[int]:
         return list(self._last_step_ids)

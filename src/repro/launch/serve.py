@@ -43,7 +43,8 @@ from repro.runtime.sharding import materialize
 from repro.serving import (AdmissionController, AsyncServer,
                            BrownoutController, ChaosConfig, FaultPlan,
                            Rejected, RetryPolicy, SpanTracer, get_router,
-                           wrap_pool)
+                           make_process_pool, wire_supervisor, wrap_pool,
+                           wrap_pool_processes)
 
 
 def make_pool(arch: str, n_instances: int = 2, *, reduced: bool = True,
@@ -74,6 +75,30 @@ def make_pool(arch: str, n_instances: int = 2, *, reduced: bool = True,
     pool = InstancePool(make_engine)
     pool.scale_to([f"inst{i}" for i in range(n_instances)])
     return pool
+
+
+def make_worker_pool(arch: str, n_workers: int, *, reduced: bool = True,
+                     policy: str = "srjf_calibrated", lam: float = 0.05,
+                     cache_tokens: int = 4096, seed: int = 0,
+                     profile: bool = False,
+                     rpc_fault_hook=None,
+                     drain_grace: float = 30.0):
+    """Process-mode pool: one supervised engine WORKER PROCESS per instance
+    (each builds its own weights — crash isolation is the point), plus the
+    supervisor that heartbeats, declares death, and restarts them. The
+    supervision constants are sized for real engines on CPU: a jit compile
+    can hold the GIL for seconds, so the miss budget tolerates ~6s of
+    unanswered beats before declaring a freeze."""
+    specs = {f"inst{i}": {"kind": "engine", "arch": arch, "reduced": reduced,
+                          "policy": policy, "lam": lam,
+                          "cache_tokens": cache_tokens, "seed": seed,
+                          "profile": profile}
+             for i in range(n_workers)}
+    return make_process_pool(
+        specs, lease=30.0, heartbeat_interval=0.5, miss_budget=12,
+        restart_backoff=0.5, restart_backoff_cap=8.0,
+        drain_grace=drain_grace, spawn_timeout=600.0, step_timeout=300.0,
+        rpc_fault_hook=rpc_fault_hook)
 
 
 def start_metrics_server(registry, port: int = 0, host: str = "127.0.0.1",
@@ -133,7 +158,7 @@ def write_trace_dump(tracer, path) -> Path:
 
 def serve_trace(arch: str = "qwen1.5-0.5b",
                 trace_name: str = "post_recommendation",
-                qps: float = 5.0, n_instances: int = 2,
+                qps: float = 5.0, n_instances: int = 2, workers: int = 0,
                 scale_tokens: float = 0.02, policy: str = "srjf_calibrated",
                 lam: float = 0.05, seed: int = 0,
                 max_requests: Optional[int] = None,
@@ -170,19 +195,35 @@ def serve_trace(arch: str = "qwen1.5-0.5b",
     seeded fault injector (``serving.chaos``). SIGTERM/SIGINT during the
     replay stops submitting and drains in-flight work for up to
     ``drain_timeout`` seconds instead of dying mid-batch.
+
+    ``workers=N`` runs PROCESS mode: N supervised engine worker processes
+    behind the RPC boundary instead of N in-process engine threads. Chaos
+    in process mode injects the process/RPC fault kinds (``kill``,
+    ``freeze``, ``rpc_drop``, ``rpc_delay``); the in-process step/submit
+    kinds only apply in thread mode.
     """
-    if pool is None:
+    plan = FaultPlan(chaos) if chaos is not None else None
+    sup = None
+    if workers and pool is None:
+        pool, sup = make_worker_pool(
+            arch, workers, policy=policy, lam=lam, seed=seed,
+            profile=profile,
+            rpc_fault_hook=plan.rpc_fault if plan is not None else None,
+            drain_grace=min(drain_timeout or 30.0, 30.0))
+    elif pool is None:
         pool = make_pool(arch, n_instances, policy=policy, lam=lam,
                          seed=seed, profile=profile)
-    plan = None
-    if chaos is not None:
-        plan = FaultPlan(chaos)
+    if plan is not None and sup is None:
         wrap_pool(pool, plan)
     ctrl = None
     if admission:
         # MIL from the engines' own model config unless given explicitly —
-        # the same closed form the profile run sizes the KV budget with
-        eng_cfg = next(iter(pool.engines.values())).cfg
+        # the same closed form the profile run sizes the KV budget with.
+        # Remote engines hold no model config frontend-side; rebuild the
+        # (weights-free) config the workers were spawned with.
+        eng_cfg = getattr(next(iter(pool.engines.values())), "cfg", None)
+        if eng_cfg is None:
+            eng_cfg = reduce_config(get_config(arch), hybrid_chunk=0)
         ctrl = AdmissionController(max_input_tokens=max_input_tokens,
                                    memory_model=MemoryModel(eng_cfg))
     # always-on request-lifecycle tracing: the ring bounds memory and the
@@ -198,7 +239,16 @@ def serve_trace(arch: str = "qwen1.5-0.5b",
                   if watchdog else None),
         brownout=BrownoutController() if brownout else None,
         tracer=tracer)
+    if sup is not None:
+        wire_supervisor(sup, server)
+        if plan is not None:
+            wrap_pool_processes(pool, plan, sup)
     server.start()
+    if sup is not None:
+        sup.start()
+        print(f"workers: " + " ".join(
+            f"{n}=pid:{sup.handles[n].pid}" for n in sorted(sup.handles)),
+            flush=True)
     exporter = None
     # SIGTERM/SIGINT -> drain instead of dying mid-batch (satellite of the
     # chaos-hardening PR: a preempted serve CLI must resolve every future)
@@ -222,6 +272,8 @@ def serve_trace(arch: str = "qwen1.5-0.5b",
         return out
     finally:
         handler.uninstall()
+        if sup is not None:
+            sup.stop(graceful=True)
         # shutdown() stops serve_forever; server_close() releases the bound
         # socket — without it a second serve_trace on the same port (the
         # documented warmed-pool reuse pattern) dies with EADDRINUSE
@@ -309,6 +361,10 @@ def main():
     ap.add_argument("--trace", default="post_recommendation")
     ap.add_argument("--qps", type=float, default=5.0)
     ap.add_argument("--instances", type=int, default=2)
+    ap.add_argument("--workers", type=int, default=0, metavar="N",
+                    help="process mode: N supervised engine worker "
+                         "PROCESSES behind the RPC boundary (0 = classic "
+                         "in-process thread mode with --instances engines)")
     ap.add_argument("--policy", default="srjf_calibrated",
                     choices=["fifo", "srjf", "srjf_calibrated"])
     ap.add_argument("--router", default="least_backlog",
@@ -360,11 +416,24 @@ def main():
                        help="P(submit raises transiently)")
     chaos.add_argument("--chaos-max-faults", type=int, default=None,
                        help="total fault budget across the run")
+    chaos.add_argument("--chaos-kill", type=float, default=0.0,
+                       help="process mode: P(SIGKILL the worker mid-batch)")
+    chaos.add_argument("--chaos-freeze", type=float, default=0.0,
+                       help="process mode: P(SIGSTOP-freeze the worker)")
+    chaos.add_argument("--chaos-freeze-seconds", type=float, default=1.0)
+    chaos.add_argument("--chaos-rpc-drop", type=float, default=0.0,
+                       help="process mode: P(drop a submit/step response)")
+    chaos.add_argument("--chaos-rpc-delay", type=float, default=0.0,
+                       help="process mode: P(delay a submit/step response)")
+    chaos.add_argument("--chaos-rpc-delay-seconds", type=float,
+                       default=0.05)
     args = ap.parse_args()
     chaos_cfg = None
     if any(r > 0 for r in (args.chaos_step_error, args.chaos_hang,
                            args.chaos_straggler, args.chaos_nan,
-                           args.chaos_submit_error)):
+                           args.chaos_submit_error, args.chaos_kill,
+                           args.chaos_freeze, args.chaos_rpc_drop,
+                           args.chaos_rpc_delay)):
         chaos_cfg = ChaosConfig(
             seed=args.chaos_seed, step_error=args.chaos_step_error,
             hang=args.chaos_hang, hang_seconds=args.chaos_hang_seconds,
@@ -372,9 +441,14 @@ def main():
             straggler_seconds=args.chaos_straggler_seconds,
             nan_score=args.chaos_nan,
             submit_error=args.chaos_submit_error,
-            max_faults=args.chaos_max_faults)
+            max_faults=args.chaos_max_faults,
+            kill=args.chaos_kill, freeze=args.chaos_freeze,
+            freeze_seconds=args.chaos_freeze_seconds,
+            rpc_drop=args.chaos_rpc_drop, rpc_delay=args.chaos_rpc_delay,
+            rpc_delay_seconds=args.chaos_rpc_delay_seconds)
     out = serve_trace(args.arch, args.trace, qps=args.qps,
-                      n_instances=args.instances, policy=args.policy,
+                      n_instances=args.instances, workers=args.workers,
+                      policy=args.policy,
                       lam=args.lam, scale_tokens=args.scale_tokens,
                       max_requests=args.max_requests, router=args.router,
                       deadline=args.deadline,

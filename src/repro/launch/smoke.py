@@ -180,34 +180,66 @@ def _fetch(url: str) -> str:
         return r.read().decode()
 
 
-def run_live_smoke(n_requests: int = 12, arch: str = "qwen1.5-0.5b") -> None:
-    """In-process end-to-end: pool -> AsyncServer(+tracer) -> HTTP scrape."""
-    import jax
-    import jax.numpy as jnp
+def run_live_smoke(n_requests: int = 12, arch: str = "qwen1.5-0.5b",
+                   workers: int = 0) -> None:
+    """In-process end-to-end: pool -> AsyncServer(+tracer) -> HTTP scrape.
+
+    ``workers=N`` runs the SAME strict validation against the process-mode
+    plane: N supervised engine worker processes behind the RPC boundary.
+    The scrape then exercises the full telemetry bridge — worker-side JCT
+    series ride the heartbeat ``dump_state`` merge, spans/batches are
+    replayed off step responses — and every validator (prometheus line
+    discipline, complete submit→deliver timelines, chrome nesting) must
+    hold with the engines in separate processes.
+    """
     import numpy as np
 
     from repro.configs import get_config, reduce_config
-    from repro.core.engine import EngineConfig, PrefillOnlyEngine
     from repro.launch.serve import start_metrics_server
-    from repro.models.model import build
-    from repro.runtime.fault_tolerance import InstancePool
     from repro.serving import AsyncServer, SpanTracer
-    from repro.runtime.sharding import materialize
 
     cfg = reduce_config(get_config(arch), hybrid_chunk=0)
-    api = build(cfg)
-    params = materialize(jax.random.PRNGKey(0), api.defs(), jnp.float32)
-
-    def make_engine(name: str) -> PrefillOnlyEngine:
+    sup = None
+    if workers:
+        from repro.serving import make_process_pool, wire_supervisor
         # solo packing + same-length requests below: after the first
         # (compile) step every step is warm -> JCT monitor has samples
-        return PrefillOnlyEngine(cfg, params,
-                                 EngineConfig(max_pack_requests=1))
+        specs = {f"inst{i}": {"kind": "engine", "arch": arch,
+                              "reduced": True, "seed": 0,
+                              "ecfg": {"max_pack_requests": 1}}
+                 for i in range(workers)}
+        pool, sup = make_process_pool(
+            specs, lease=30.0, heartbeat_interval=0.4, miss_budget=12,
+            spawn_timeout=600.0, step_timeout=300.0, drain_grace=30.0)
+    else:
+        import jax
+        import jax.numpy as jnp
 
-    pool = InstancePool(make_engine)
-    pool.scale_to(["inst0"])
+        from repro.core.engine import EngineConfig, PrefillOnlyEngine
+        from repro.models.model import build
+        from repro.runtime.fault_tolerance import InstancePool
+        from repro.runtime.sharding import materialize
+
+        api = build(cfg)
+        params = materialize(jax.random.PRNGKey(0), api.defs(), jnp.float32)
+
+        def make_engine(name: str) -> PrefillOnlyEngine:
+            return PrefillOnlyEngine(cfg, params,
+                                     EngineConfig(max_pack_requests=1))
+
+        pool = InstancePool(make_engine)
+        pool.scale_to(["inst0"])
     tracer = SpanTracer()
     server = AsyncServer(pool, tracer=tracer).start()
+    if sup is not None:
+        import os as _os
+        wire_supervisor(sup, server)
+        sup.start()
+        pids = {h.pid for h in sup.handles.values()}
+        assert _os.getpid() not in pids, \
+            f"worker pids overlap the frontend: {pids}"
+        print(f"process mode: {len(pids)} worker processes "
+              f"{sorted(pids)} (frontend pid {_os.getpid()})")
     exporter = start_metrics_server(server.metrics, 0, tracer=tracer)
     host, port = exporter.server_address
     base = f"http://{host}:{port}"
@@ -217,10 +249,16 @@ def run_live_smoke(n_requests: int = 12, arch: str = "qwen1.5-0.5b") -> None:
                               rng.integers(0, cfg.vocab_size, 40).tolist(),
                               allowed_tokens=(5, 9))
                 for i in range(n_requests)]
-        assert server.drain(timeout=120.0), "drain timed out"
+        assert server.drain(timeout=600.0 if workers else 120.0), \
+            "drain timed out"
         results = [f.result() for f in futs]
         delivered = [r for r in results if isinstance(r, dict)]
         assert delivered, f"nothing delivered: {results}"
+        if sup is not None:
+            # worker-side JCT series arrive on the NEXT heartbeat after the
+            # final warm step; wait out one beat cycle before scraping
+            import time as _time
+            _time.sleep(3 * sup.heartbeat_interval)
 
         prom = _fetch(base + "/metrics")
         series = parse_prometheus(prom)
@@ -243,6 +281,8 @@ def run_live_smoke(n_requests: int = 12, arch: str = "qwen1.5-0.5b") -> None:
         print(f"chrome trace ok: {nested} phase spans nested")
     finally:
         server.shutdown(drain=False)
+        if sup is not None:
+            sup.stop(graceful=True)
         exporter.shutdown()
         exporter.server_close()
 
@@ -261,6 +301,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--requests", type=int, default=12)
     ap.add_argument("--arch", default="qwen1.5-0.5b")
+    ap.add_argument("--workers", type=int, default=0, metavar="N",
+                    help="process mode: validate against N supervised "
+                         "engine worker processes (0 = in-process pool)")
     ap.add_argument("--jsonl", default=None, metavar="FILE",
                     help="validate an existing --trace-dump file pair "
                          "instead of running the live smoke")
@@ -269,7 +312,7 @@ def main() -> None:
         if args.jsonl:
             validate_dump_files(args.jsonl)
         else:
-            run_live_smoke(args.requests, args.arch)
+            run_live_smoke(args.requests, args.arch, workers=args.workers)
     except (AssertionError, ValueError, KeyError) as e:
         print(f"SMOKE FAILED: {e}", file=sys.stderr)
         sys.exit(1)

@@ -227,22 +227,40 @@ class InstancePool:
 
     def _drain(self, name: str) -> List:
         eng = self.engines[name]
-        with _engine_lock(eng):
-            pending = list(getattr(eng, "queue", []))
-            eng.queue and eng.queue.clear()
+        # cross-process engines (serving.supervisor.RemoteEngine) expose
+        # drain_queue/requeue hooks: the shadow queue must be handed over
+        # atomically, and a re-home must actually cross the RPC boundary —
+        # a bare peer.queue.append would only mutate the client-side mirror
+        drain = getattr(eng, "drain_queue", None)
+        if drain is not None:
+            pending = drain()
+        else:
+            with _engine_lock(eng):
+                pending = list(getattr(eng, "queue", []))
+                eng.queue and eng.queue.clear()
         dropped = []
         for r in pending:
             target = self.route(r.user_id or str(r.req_id))
-            if target is not None:
-                peer = self.engines[target]
-                _rechain(r, eng, peer)
-                with _engine_lock(peer):
-                    peer.queue.append(r)
-                self.redispatched += 1
-                if self.on_rehome is not None:
-                    self.on_rehome(r.req_id, name, target)
-            else:
+            if target is None:
                 dropped.append(r)
+                continue
+            peer = self.engines[target]
+            _rechain(r, eng, peer)
+            requeue = getattr(peer, "requeue", None)
+            try:
+                if requeue is not None:
+                    requeue([r])
+                else:
+                    with _engine_lock(peer):
+                        peer.queue.append(r)
+            except Exception:
+                # the chosen peer refused (draining/dead mid-scan): the
+                # caller decides the request's fate, same as no-peer
+                dropped.append(r)
+                continue
+            self.redispatched += 1
+            if self.on_rehome is not None:
+                self.on_rehome(r.req_id, name, target)
         return dropped
 
     def live_names(self) -> List[str]:

@@ -11,18 +11,31 @@ behind a router — as a first-class layer:
   metrics                 counters / gauges / fixed-bucket histograms,
                           per-instance and global, text dump
   chaos                   seeded deterministic fault injection (step crash,
-                          hang, straggler, NaN corruption, submit failure)
+                          hang, straggler, NaN corruption, submit failure;
+                          process mode: SIGKILL, SIGSTOP freeze, RPC
+                          response drop/delay)
   robustness              idempotent retry (RetryPolicy), JCT-deadline
                           watchdog, brownout ladder (BrownoutController)
+  worker / rpc /          cross-process plane: engine worker processes
+  supervisor              behind a length-prefixed localhost RPC boundary,
+                          heartbeat-lease failure detection, supervised
+                          restart with crash-loop budget
 """
 from repro.serving.admission import (AdmissionController,          # noqa: F401
                                      BrownoutController, Rejected)
 from repro.serving.chaos import (ChaosConfig, ChaosEngine,         # noqa: F401
-                                 FaultPlan, InjectedFault, wrap_pool)
+                                 FaultPlan, InjectedFault,
+                                 wrap_pool, wrap_pool_processes)
 from repro.serving.metrics import (Counter, Gauge, Histogram,      # noqa: F401
                                    MetricsRegistry, StateGauge)
 from repro.serving.router import (LeastBacklogRouter,              # noqa: F401
                                   UserHashRouter, get_router)
+from repro.serving.rpc import (RpcClient, RpcClosed, RpcDropped,   # noqa: F401
+                               RpcError, RpcRemoteError, RpcTimeout)
 from repro.serving.server import AsyncServer, RetryPolicy          # noqa: F401
+from repro.serving.supervisor import (RemoteEngine,                # noqa: F401
+                                      WorkerSupervisor,
+                                      make_process_pool,
+                                      wire_supervisor)
 from repro.serving.tracing import (BatchRecord,                    # noqa: F401
                                    JCTCalibrationMonitor, SpanTracer)

@@ -31,13 +31,37 @@ request interleaving); ``ChaosEngine`` wraps a pool engine and injects:
   submit_error submit() raises ``InjectedFault`` — a transient enqueue
                failure; the server must fall back to a peer.
 
+Process-mode faults (the cross-process serving plane of
+``serving.supervisor``) go further — the fault hits a real worker PROCESS,
+not a proxy:
+
+  kill         SIGKILL the worker a beat after its step was driven — the
+               kernel guarantees mid-batch death, no Python cleanup runs.
+               Detection: TCP reset on the in-flight step RPC + missed
+               heartbeats; recovery: shadow-queue re-home + idempotent
+               retry + supervised restart.
+  freeze       SIGSTOP the worker mid-batch (SIGCONT after
+               ``freeze_seconds``) — the process is alive but silent: no
+               heartbeats, no RPC responses, no TCP reset. The supervisor
+               must declare it dead on lease expiry and SIGKILL it to
+               unblock the frontend.
+  rpc_drop     the worker processed the call; the response is dropped at
+               the client edge (``RpcClient.fault_hook``) — the classic
+               "did it happen?" network fault. Exactly-once must hold.
+  rpc_delay    the response is delayed ``rpc_delay_seconds`` — tests
+               timeout discipline without killing anything.
+
 Wrap a whole pool with ``wrap_pool(pool, plan)`` — live engines are wrapped
 in place and ``pool.make_engine`` is chained so instances born later (scale-
-up, resurrection) inherit the same plan.
+up, resurrection) inherit the same plan. For process pools use
+``wrap_pool_processes(pool, plan, sup)`` (kill/freeze) plus
+``plan.rpc_fault`` as the supervisor's ``rpc_fault_hook`` (drop/delay).
 """
 from __future__ import annotations
 
 import dataclasses
+import os
+import signal
 import threading
 import time
 from typing import Dict, List, Optional, Sequence, Tuple
@@ -46,7 +70,15 @@ import numpy as np
 
 STEP_FAULTS = ("step_error", "hang", "straggler", "nan_score")
 SUBMIT_FAULTS = ("submit_error",)
-FAULT_KINDS = STEP_FAULTS + SUBMIT_FAULTS
+PROCESS_FAULTS = ("kill", "freeze")
+RPC_FAULTS = ("rpc_drop", "rpc_delay")
+FAULT_KINDS = STEP_FAULTS + SUBMIT_FAULTS + PROCESS_FAULTS + RPC_FAULTS
+
+# which operation stream each fault kind draws from (see FaultPlan.draw)
+_OP_OF = {**{k: "step" for k in STEP_FAULTS},
+          **{k: "submit" for k in SUBMIT_FAULTS},
+          **{k: "pstep" for k in PROCESS_FAULTS},
+          **{k: "rpc" for k in RPC_FAULTS}}
 
 
 class InjectedFault(RuntimeError):
@@ -73,6 +105,12 @@ class ChaosConfig:
     straggler_seconds: float = 0.1
     nan_score: float = 0.0
     submit_error: float = 0.0
+    kill: float = 0.0
+    freeze: float = 0.0
+    freeze_seconds: float = 1.0
+    rpc_drop: float = 0.0
+    rpc_delay: float = 0.0
+    rpc_delay_seconds: float = 0.05
     schedule: Sequence[Tuple[str, int, str]] = ()
     max_faults: Optional[int] = None
 
@@ -96,8 +134,7 @@ class FaultPlan:
         self._lock = threading.Lock()
         self._rngs: Dict[str, np.random.Generator] = {}
         self._ops: Dict[Tuple[str, str], int] = {}       # (instance, op) -> n
-        self._sched = {(i, n, "step" if k in STEP_FAULTS else "submit"): k
-                       for i, n, k in cfg.schedule}
+        self._sched = {(i, n, _OP_OF[k]): k for i, n, k in cfg.schedule}
 
     def _rng(self, instance: str) -> np.random.Generator:
         if instance not in self._rngs:
@@ -111,18 +148,19 @@ class FaultPlan:
     def draw(self, instance: str, op: str) -> Optional[str]:
         """The fault to inject for this instance's next ``op`` — or None.
 
-        ``op`` is "step" or "submit". Consumes one operation index either
-        way (rates stay per-operation, not per-call-that-faulted).
+        ``op`` is "step", "submit", "pstep" (process-level step fault), or
+        "rpc" (response fault). Consumes one operation index either way
+        (rates stay per-operation, not per-call-that-faulted).
         """
+        ladders = {"step": STEP_FAULTS, "submit": SUBMIT_FAULTS,
+                   "pstep": PROCESS_FAULTS, "rpc": RPC_FAULTS}
         cfg = self.cfg
         with self._lock:
             n = self._ops.get((instance, op), 0)
             self._ops[(instance, op)] = n + 1
             kind = self._sched.get((instance, n, op))
             if kind is None:
-                rates = ([(k, getattr(cfg, k)) for k in STEP_FAULTS]
-                         if op == "step" else
-                         [(k, getattr(cfg, k)) for k in SUBMIT_FAULTS])
+                rates = [(k, getattr(cfg, k)) for k in ladders[op]]
                 # one uniform draw walks the rate ladder: stable under
                 # adding kinds, and each op costs exactly one rng call
                 u = float(self._rng(instance).uniform())
@@ -146,6 +184,23 @@ class FaultPlan:
             for _, _, k in self.injected:
                 out[k] = out.get(k, 0) + 1
             return out
+
+    def rpc_fault(self, instance: str,
+                  op: str) -> Optional[Tuple[str, float]]:
+        """``RpcClient.fault_hook`` adapter: drop/delay the RESPONSE of a
+        submit or step call (the worker already processed it — exactly the
+        fault window where exactly-once is hardest). Other ops (heartbeat,
+        probe, requeue) are left alone: randomly failing the failure
+        DETECTOR itself would make every soak assertion about detection
+        latency vacuous."""
+        if op not in ("submit", "step"):
+            return None
+        kind = self.draw(instance, "rpc")
+        if kind == "rpc_drop":
+            return ("rpc_drop", 0.0)
+        if kind == "rpc_delay":
+            return ("rpc_delay", self.cfg.rpc_delay_seconds)
+        return None
 
 
 class ChaosEngine:
@@ -256,6 +311,73 @@ def _lock_of(eng):
         return lock
     import contextlib
     return contextlib.nullcontext()
+
+
+class ProcessChaosEngine:
+    """Process-level fault injector for a ``RemoteEngine``.
+
+    Wraps the pool entry; every driven step with believed-queued work draws
+    from the ``pstep`` stream. ``kill``/``freeze`` fire a timer that
+    signals the worker PROCESS ``delay`` seconds into the step — i.e. mid-
+    batch, while the RPC is in flight — so the fault lands exactly where a
+    real chip lockup or OOM-kill would. Everything else proxies through:
+    the server, router, watchdog, and pool drive the remote engine
+    unchanged.
+    """
+
+    def __init__(self, inner, name: str, plan: FaultPlan, pid_of,
+                 delay: float = 0.02):
+        self._inner = inner
+        self._name = name
+        self._plan = plan
+        self._pid_of = pid_of     # supervisor.pid_of — tracks restarts
+        self._delay = delay
+
+    def __getattr__(self, attr):
+        return getattr(self._inner, attr)
+
+    def step(self) -> Optional[int]:
+        if getattr(self._inner, "queue", None):
+            kind = self._plan.draw(self._name, "pstep")
+            if kind in PROCESS_FAULTS:
+                pid = self._pid_of(self._name)
+                if pid is not None:
+                    t = threading.Timer(self._delay, self._fire,
+                                        args=(kind, pid))
+                    t.daemon = True
+                    t.start()
+        return self._inner.step()
+
+    def _fire(self, kind: str, pid: int) -> None:
+        try:
+            if kind == "kill":
+                os.kill(pid, signal.SIGKILL)
+            else:
+                os.kill(pid, signal.SIGSTOP)
+                t = threading.Timer(self._plan.cfg.freeze_seconds,
+                                    self._thaw, args=(pid,))
+                t.daemon = True
+                t.start()
+        except (ProcessLookupError, PermissionError):
+            pass      # already dead/restarted: the fault found a corpse
+
+    def _thaw(self, pid: int) -> None:
+        try:
+            os.kill(pid, signal.SIGCONT)
+        except (ProcessLookupError, PermissionError):
+            pass
+
+
+def wrap_pool_processes(pool, plan: FaultPlan, sup, delay: float = 0.02):
+    """Wrap every RemoteEngine of a process pool in a ProcessChaosEngine
+    (kill/freeze). Pair with ``rpc_fault_hook=plan.rpc_fault`` on the
+    supervisor for response drop/delay faults. Returns ``pool``."""
+    for name in list(pool.engines):
+        eng = pool.engines[name]
+        if not isinstance(eng, ProcessChaosEngine):
+            pool.engines[name] = ProcessChaosEngine(eng, name, plan,
+                                                    sup.pid_of, delay)
+    return pool
 
 
 def wrap_pool(pool, plan: FaultPlan):

@@ -31,6 +31,12 @@ class Counter:
         with self._lock:
             self._v += n
 
+    def load(self, v: float) -> None:
+        """Overwrite with an authoritative remote value (telemetry merge —
+        the worker process owns the truth for its own series)."""
+        with self._lock:
+            self._v = float(v)
+
     @property
     def value(self) -> float:
         return self._v
@@ -114,6 +120,18 @@ class Histogram:
         with self._lock:
             return (list(self.counts), self.count, self.sum, self.min,
                     self.max)
+
+    def load(self, counts: Sequence[int], count: int, total: float,
+             mn: float, mx: float) -> None:
+        """Overwrite with an authoritative remote snapshot (same bucket
+        table on both sides — DEFAULT_BUCKETS everywhere)."""
+        assert len(counts) == len(self.counts), "bucket tables differ"
+        with self._lock:
+            self.counts = list(counts)
+            self.count = count
+            self.sum = total
+            self.min = mn
+            self.max = mx
 
     def merge(self, other: "Histogram") -> "Histogram":
         assert self.bounds == other.bounds, "histograms must share buckets"
@@ -220,6 +238,56 @@ class MetricsRegistry:
         for _, h in self._named("hist", name):
             out.merge(h)
         return out
+
+    # ---- cross-process state transfer ------------------------------------
+    def dump_state(self) -> List[Dict]:
+        """JSON-able snapshot of every series — the worker side of the
+        telemetry bridge (heartbeat responses carry this)."""
+        with self._lock:
+            items = list(self._m.items())
+            help_texts = dict(self._help)
+        rows: List[Dict] = []
+        for (kind, name, inst), m in items:
+            row: Dict = {"kind": kind, "name": name, "instance": inst,
+                         "help": help_texts.get(name)}
+            if kind in ("counter", "gauge"):
+                row["value"] = m.value
+            elif kind == "state":
+                row["value"] = m.value
+                row["states"] = list(m.states)
+            else:
+                counts, count, total, mn, mx = m._snapshot()
+                row.update(counts=counts, count=count, sum=total,
+                           min=(None if math.isinf(mn) else mn),
+                           max=(None if math.isinf(mx) else mx))
+            rows.append(row)
+        return rows
+
+    def merge_state(self, rows: Sequence[Dict],
+                    instance: Optional[str] = None) -> None:
+        """Load a worker's ``dump_state`` into this registry, overwriting
+        per-series (the worker owns the truth for its own series; frontend-
+        and worker-authored series are disjoint by name, so a blind
+        overwrite never clobbers frontend counts). ``instance`` forces the
+        instance label (a worker always reports as itself)."""
+        for row in rows:
+            kind = row["kind"]
+            inst = instance if instance is not None else row["instance"]
+            name = row["name"]
+            if row.get("help"):
+                self.describe(name, row["help"])
+            if kind == "counter":
+                self.counter(name, inst).load(row["value"])
+            elif kind == "gauge":
+                self.gauge(name, inst).set(row["value"])
+            elif kind == "state":
+                self.state_gauge(name, row["states"], inst).set(
+                    int(row["value"]))
+            else:
+                self.histogram(name, inst).load(
+                    row["counts"], row["count"], row["sum"],
+                    math.inf if row["min"] is None else row["min"],
+                    -math.inf if row["max"] is None else row["max"])
 
     # ---- text dump (benchmark output) ------------------------------------
     def render(self) -> str:

@@ -65,16 +65,28 @@ class LeastBacklogRouter:
               chains: Optional[Dict[int, Tuple[int, ...]]] = None) -> str:
         names = sorted(instances)
         scores = {}
+        matched = {}
         for name in names:
             eng = instances[name]
-            scores[name] = eng.pending_jct() + eng.predict_jct(
-                n_input, chain_for(eng, chain, chains))
+            c = chain_for(eng, chain, chains)
+            probe = getattr(eng, "probe", None)
+            if probe is not None:
+                # batched probe: all three numbers in ONE engine-lock
+                # acquisition (in-process) or ONE staleness-bounded RPC
+                # (cross-process RemoteEngine) per instance per scan
+                pending, predict, matched[name] = probe(n_input, c)
+                scores[name] = pending + predict
+            else:
+                scores[name] = eng.pending_jct() + eng.predict_jct(
+                    n_input, c)
         best = min(scores.values())
         window = best + self.affinity_tol * max(best, 1e-9)
         close = [n for n in names if scores[n] <= window]
         if len(close) > 1:
-            matched = {n: instances[n].cached_prefix_len(
-                chain_for(instances[n], chain, chains)) for n in close}
+            matched = {n: matched[n] if n in matched
+                       else instances[n].cached_prefix_len(
+                           chain_for(instances[n], chain, chains))
+                       for n in close}
             top = max(matched.values())
             if top > 0:
                 close = [n for n in close if matched[n] == top]

@@ -1,0 +1,214 @@
+"""Length-prefixed JSON RPC over localhost TCP — the worker-plane wire.
+
+The cross-process serving plane needs exactly one transport property the
+in-process thread pool never did: a call into a worker that was SIGKILLed,
+SIGSTOPped, or wedged must come back as a *typed, bounded-time error* the
+caller can route into the existing retry/confiscation stack, never as an
+indefinite hang. Everything here serves that:
+
+  framing      4-byte big-endian length + JSON body. One frame per message;
+               a torn frame (peer died mid-write) raises ``RpcClosed``.
+  RpcClient    thread-safe client with connection REUSE (a free-list of
+               sockets — each call checks one out, so concurrent callers
+               from the serving worker thread, the supervisor heartbeat
+               thread, and router probes never share a socket mid-frame),
+               per-call timeouts, and BOUNDED retries on connection errors
+               for ops the worker dedupes (submit is idempotent by rid).
+  fault hook   ``fault_hook(op)`` lets the chaos harness drop or delay
+               responses at the client edge — the worker processed the
+               request, the caller never learns — which is exactly the
+               network fault a real deployment sees.
+
+Timeout discipline: a timed-out socket is CLOSED, never returned to the
+free list (its response may still arrive and would corrupt the next call's
+framing). The caller decides what a timeout means — for ``step`` it means
+the batch is lost (idempotent re-submission is safe); for ``heartbeat`` it
+is one missed beat.
+"""
+from __future__ import annotations
+
+import json
+import socket
+import struct
+import threading
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+_LEN = struct.Struct(">I")
+MAX_FRAME = 64 * 1024 * 1024
+
+
+class RpcError(RuntimeError):
+    """Transport-level failure (connect refused, peer died, bad frame)."""
+
+
+class RpcClosed(RpcError):
+    """Peer closed the connection mid-frame (process death mid-call)."""
+
+
+class RpcTimeout(RpcError):
+    """Per-call deadline exceeded (frozen/wedged worker)."""
+
+
+class RpcRemoteError(RpcError):
+    """The worker handled the frame and returned an application error."""
+
+
+class RpcDropped(RpcError):
+    """Chaos: the response was dropped at the client edge (the worker DID
+    process the request — callers must treat this as 'unknown outcome')."""
+
+
+def _json_default(o):
+    """Engine stats carry numpy scalars; coerce anything float-like, fall
+    back to repr so a weird payload degrades to a string, never a crash."""
+    try:
+        return float(o)
+    except Exception:
+        return repr(o)
+
+
+def send_msg(sock: socket.socket, obj: Dict) -> None:
+    body = json.dumps(obj, separators=(",", ":"),
+                      default=_json_default).encode()
+    if len(body) > MAX_FRAME:
+        raise RpcError(f"frame too large: {len(body)}")
+    sock.sendall(_LEN.pack(len(body)) + body)
+
+
+def _recv_exact(sock: socket.socket, n: int) -> bytes:
+    buf = bytearray()
+    while len(buf) < n:
+        try:
+            chunk = sock.recv(n - len(buf))
+        except socket.timeout as e:
+            raise RpcTimeout(str(e) or "recv timed out")
+        if not chunk:
+            raise RpcClosed(f"peer closed after {len(buf)}/{n} bytes")
+        buf.extend(chunk)
+    return bytes(buf)
+
+
+def recv_msg(sock: socket.socket) -> Dict:
+    (n,) = _LEN.unpack(_recv_exact(sock, _LEN.size))
+    if n > MAX_FRAME:
+        raise RpcError(f"frame too large: {n}")
+    return json.loads(_recv_exact(sock, n))
+
+
+class RpcClient:
+    """Thread-safe RPC client with connection reuse and bounded retries.
+
+    ``call(op, timeout=..., retries=...)`` retries ONLY on connection-level
+    errors (refused / peer closed before a response byte arrived), never on
+    ``RpcTimeout`` — a timeout means the worker may still be executing, and
+    blind re-send would double work the caller is about to confiscate.
+    Retries sleep ``retry_backoff * 2**k`` between attempts.
+    """
+
+    def __init__(self, host: str, port: int, *,
+                 connect_timeout: float = 5.0, retry_backoff: float = 0.02,
+                 fault_hook: Optional[Callable[[str], Optional[Tuple[str,
+                                               float]]]] = None):
+        self.host = host
+        self.port = port
+        self.connect_timeout = connect_timeout
+        self.retry_backoff = retry_backoff
+        self.fault_hook = fault_hook
+        self._free: List[socket.socket] = []
+        self._lock = threading.Lock()
+        self._closed = False
+        self.calls = 0
+        self.reconnects = 0
+
+    # ---- connection pool -------------------------------------------------
+    def _checkout(self) -> socket.socket:
+        with self._lock:
+            if self._closed:
+                raise RpcError("client closed")
+            if self._free:
+                return self._free.pop()
+        self.reconnects += 1
+        try:
+            s = socket.create_connection((self.host, self.port),
+                                         timeout=self.connect_timeout)
+            s.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+            return s
+        except OSError as e:
+            raise RpcError(f"connect {self.host}:{self.port}: {e}")
+
+    def _checkin(self, s: socket.socket) -> None:
+        with self._lock:
+            if not self._closed and len(self._free) < 8:
+                self._free.append(s)
+                return
+        s.close()
+
+    def retarget(self, host: str, port: int) -> None:
+        """Point at a restarted worker's new address; drops pooled sockets
+        (they belong to the dead process)."""
+        with self._lock:
+            self.host, self.port = host, port
+            free, self._free = self._free, []
+        for s in free:
+            s.close()
+
+    def close(self) -> None:
+        with self._lock:
+            self._closed = True
+            free, self._free = self._free, []
+        for s in free:
+            s.close()
+
+    # ---- calls -----------------------------------------------------------
+    def call(self, op: str, payload: Optional[Dict] = None, *,
+             timeout: float = 10.0, retries: int = 0) -> Dict:
+        """One RPC; returns the worker's ``out`` dict. Raises a typed
+        ``RpcError`` subclass on failure. ``retries`` bounds re-sends on
+        connection errors (use only for ops the worker dedupes)."""
+        attempt = 0
+        while True:
+            try:
+                return self._call_once(op, payload, timeout)
+            except (RpcTimeout, RpcRemoteError, RpcDropped):
+                raise
+            except RpcError:
+                if attempt >= retries:
+                    raise
+                time.sleep(self.retry_backoff * (2 ** attempt))
+                attempt += 1
+
+    def _call_once(self, op: str, payload: Optional[Dict],
+                   timeout: float) -> Dict:
+        self.calls += 1
+        msg = {"op": op}
+        if payload:
+            msg.update(payload)
+        s = self._checkout()
+        try:
+            s.settimeout(timeout)
+            send_msg(s, msg)
+            resp = recv_msg(s)
+        except Exception as e:
+            s.close()     # never reuse a socket in an unknown frame state
+            if isinstance(e, RpcError):
+                raise
+            if isinstance(e, socket.timeout):
+                raise RpcTimeout(str(e) or f"{op} timed out")
+            if isinstance(e, (OSError, ValueError)):
+                # ECONNRESET from a SIGKILLed peer, torn/garbage frame:
+                # connection-level, retry-eligible
+                raise RpcClosed(f"{op}: {e}") from e
+            raise
+        fault = self.fault_hook(op) if self.fault_hook is not None else None
+        if fault is not None:
+            kind, arg = fault
+            if kind == "rpc_drop":
+                s.close()
+                raise RpcDropped(f"chaos dropped {op} response")
+            if kind == "rpc_delay":
+                time.sleep(arg)
+        self._checkin(s)
+        if not resp.get("ok"):
+            raise RpcRemoteError(resp.get("error", "unknown remote error"))
+        return resp.get("out", {})

@@ -67,7 +67,9 @@ README's metric table for the robustness series).
 from __future__ import annotations
 
 import dataclasses
+import heapq
 import math
+import random
 import threading
 import time
 from concurrent.futures import Future
@@ -87,15 +89,24 @@ class RetryPolicy:
     """Idempotent-retry budget for work lost in flight.
 
     ``budget`` bounds re-submissions per request (0 disables retry: lost
-    work resolves ``Rejected("error")`` immediately). ``backoff`` is the
-    base of a per-request exponential backoff slept before each re-submit
-    (attempt k sleeps ``min(backoff_cap, backoff * 2**k)``); 0 retries
-    immediately. ``tombstone_ttl`` bounds how long a confiscated request's
-    drop-late-result marker is kept when no late result ever arrives."""
+    work resolves ``Rejected("error")`` immediately). ``backoff`` sizes a
+    per-request FULL-JITTER exponential backoff before each re-submit:
+    attempt k waits ``uniform(0, min(backoff_cap, backoff * 2**k))`` — full
+    jitter decorrelates the retry herd after a correlated failure (one dead
+    instance confiscates a whole batch at once), while the un-jittered
+    ladder re-synchronized every retry onto the same peer at the same
+    instant. ``backoff == 0`` retries immediately. ``jitter_seed`` makes
+    the draw sequence deterministic for tests. When the server runs a
+    maintenance thread, the wait is served by a delayed-resubmit queue
+    drained there — the harvesting worker thread never sleeps a backoff
+    inline. ``tombstone_ttl`` bounds how long a confiscated request's
+    drop-late-result marker (and an unclaimed early-result orphan) is kept
+    when nothing ever collects it."""
     budget: int = 2
     backoff: float = 0.02
     backoff_cap: float = 0.5
     tombstone_ttl: float = 300.0
+    jitter_seed: Optional[int] = None
 
 
 class _Tracked:
@@ -158,8 +169,16 @@ class AsyncServer:
                 rid, "rehome", src=src, dst=dst)
         self._futures: Dict[int, Future] = {}
         self._early: Dict[int, object] = {}   # results that beat registration
+        self._early_ts: Dict[int, float] = {}  # ... and when they parked
         self._tracked: Dict[int, _Tracked] = {}
         self._moved: Dict[int, float] = {}    # confiscated rid -> when
+        # delayed-resubmit queue: (due, seq, rid, exclude, cause) — lost
+        # work waiting out its jittered backoff, drained by maintenance
+        self._delayed: List[Tuple[float, int, int, Optional[str], str]] = []
+        self._delayed_seq = 0
+        self._retry_rng = random.Random(self.retry.jitter_seed
+                                        if self.retry is not None else None)
+        self._rng_lock = threading.Lock()
         self._lock = threading.Lock()
         self._cond = threading.Condition(self._lock)
         self._outstanding = 0
@@ -186,7 +205,12 @@ class AsyncServer:
         self._bind_engines()
         for name in self.pool.live_names():
             self._start_worker(name)
-        if (self.watchdog is not None or self.brownout is not None) \
+        # the maintenance thread also serves the delayed-resubmit queue, so
+        # it must run whenever backoff retries are possible — not only when
+        # a watchdog/brownout is configured
+        if (self.watchdog is not None or self.brownout is not None
+                or (self.retry is not None and self.retry.budget > 0
+                    and self.retry.backoff > 0)) \
                 and self._maint_thread is None:
             self._maint_thread = threading.Thread(
                 target=self._maintenance, name="serve-watchdog", daemon=True)
@@ -344,6 +368,7 @@ class AsyncServer:
             sp.event(ctx, "enqueue", instance=name, req_id=rid)
         with self._lock:
             early = self._early.pop(rid, None)
+            self._early_ts.pop(rid, None)
             if early is None:
                 self._futures[rid] = fut
                 if self.retry is not None and self.retry.budget > 0:
@@ -365,15 +390,22 @@ class AsyncServer:
             return fut
         # close the enqueue-vs-failure race: if the instance was failed (or
         # the server stopped accepting) while we were enqueueing, the drain
-        # may have run BEFORE our append — reclaim the orphan and reject it.
-        # cancel() returning None means a worker/peer already owns it.
+        # may have run BEFORE our append — reclaim the orphan and re-home it
+        # to a healthy peer through the retry machinery (the common case in
+        # process mode, where submits race the ~100ms failure window), else
+        # reject it. cancel() returning None means a worker/peer owns it.
         if not self.pool.healthy.get(name, False) or not self._accepting:
             if eng.cancel(rid) is not None:
-                reason = ("shutdown" if not self._accepting
-                          else "no_instances")
-                self._reject(rid, Rejected(reason, "instance lost after "
-                                           "enqueue", req_id=rid,
-                                           user_id=user_id))
+                peers = [n for n in self.pool.live_names() if n != name]
+                if (self._accepting and peers and self.retry is not None
+                        and self.retry.budget > 0):
+                    self._handle_lost(rid, name, "enqueue raced failure")
+                else:
+                    reason = ("shutdown" if not self._accepting
+                              else "no_instances")
+                    self._reject(rid, Rejected(reason, "instance lost after "
+                                               "enqueue", req_id=rid,
+                                               user_id=user_id))
         return fut
 
     def cancel(self, req_id: int) -> bool:
@@ -418,8 +450,11 @@ class AsyncServer:
             fut = self._futures.pop(rid, None)
             if fut is None:
                 # submit() hasn't registered the future yet — park the result
-                # (submit finishes the trace at registration)
+                # (submit finishes the trace at registration). Timestamped:
+                # an orphan nobody ever claims (e.g. a dropped-response
+                # submit the worker enqueued anyway) is GC'd by maintenance
                 self._early[rid] = result
+                self._early_ts[rid] = time.perf_counter()
                 return "parked"
             self._tracked.pop(rid, None)
             self._outstanding -= 1
@@ -465,9 +500,50 @@ class AsyncServer:
                                        f"({cause})", req_id=rid,
                                        user_id=tr.user_id))
             return
+        delay = 0.0
         if pol.backoff > 0:
-            time.sleep(min(pol.backoff_cap,
-                           pol.backoff * (2 ** tr.attempts)))
+            cap = min(pol.backoff_cap, pol.backoff * (2 ** tr.attempts))
+            with self._rng_lock:        # full jitter: uniform(0, ladder)
+                delay = self._retry_rng.uniform(0.0, cap)
+        if delay > 0 and self._maint_thread is not None:
+            # park on the delayed-resubmit queue instead of sleeping HERE:
+            # this path runs on the harvesting worker thread (and on the
+            # watchdog scan), where an inline backoff stalls every other
+            # request on the instance for the duration
+            with self._lock:
+                if rid in self._moved or rid not in self._futures:
+                    return
+                self._delayed_seq += 1
+                heapq.heappush(self._delayed,
+                               (time.perf_counter() + delay,
+                                self._delayed_seq, rid, exclude, cause))
+            self.metrics.counter("retries_delayed").inc()
+            if sp is not None:
+                sp.event_rid(rid, "retry_delayed", delay=delay)
+            return
+        if delay > 0:
+            time.sleep(delay)     # no maintenance thread: legacy inline
+        self._resubmit_lost(rid, exclude, cause)
+
+    def _resubmit_lost(self, rid: int, exclude: Optional[str],
+                       cause: str) -> None:
+        """Route/enqueue/re-key tail of ``_handle_lost``, entered after the
+        backoff wait (inline or from the delayed queue). Re-checks
+        ownership: the rid may have resolved or been confiscated while it
+        waited."""
+        sp = self.tracer
+        with self._lock:
+            if rid in self._moved or rid not in self._futures:
+                return
+            tr = self._tracked.get(rid)
+        if tr is None:
+            self._reject(rid, Rejected("error", cause, req_id=rid))
+            return
+        if not self._accepting:
+            self._reject(rid, Rejected("error", f"lost during shutdown "
+                                       f"({cause})", req_id=rid,
+                                       user_id=tr.user_id))
+            return
         live = {n: self.pool.engines[n] for n in self.pool.live_names()
                 if n != exclude}
         if not live:
@@ -515,6 +591,7 @@ class AsyncServer:
                 tr.prior.append(rid)      # drop it, never double-deliver
                 tr.attempts += 1
                 early = self._early.pop(new_rid, None)
+                self._early_ts.pop(new_rid, None)
                 if early is None:
                     self._futures[new_rid] = fut
                     self._tracked[new_rid] = tr
@@ -550,6 +627,7 @@ class AsyncServer:
                 self._watchdog_scan()
             if self.brownout is not None:
                 self._brownout_tick()
+            self._drain_delayed()
             self._gc_tombstones()
 
     def _watchdog_scan(self) -> None:
@@ -626,15 +704,36 @@ class AsyncServer:
             if set_deg is not None:
                 set_deg(degraded)
 
+    def _drain_delayed(self) -> None:
+        """Re-submit lost work whose jittered backoff has elapsed (the
+        delayed-resubmit queue ``_handle_lost`` parks on when a
+        maintenance thread exists)."""
+        now = time.perf_counter()
+        ready = []
+        with self._lock:
+            while self._delayed and self._delayed[0][0] <= now:
+                ready.append(heapq.heappop(self._delayed))
+        for _, _, rid, exclude, cause in ready:
+            self._resubmit_lost(rid, exclude, cause)
+
     def _gc_tombstones(self) -> None:
         """Drop confiscation tombstones whose late result never arrived
-        (the crashed worker died before harvesting) — bounds the set."""
+        (the crashed worker died before harvesting), and early-result
+        orphans no submit() ever claimed (a dropped-response submit the
+        worker enqueued and served anyway) — bounds both sets."""
         ttl = self.retry.tombstone_ttl if self.retry is not None else 300.0
         cutoff = time.perf_counter() - ttl
         with self._lock:
             stale = [rid for rid, t in self._moved.items() if t < cutoff]
             for rid in stale:
                 del self._moved[rid]
+            orphans = [rid for rid, t in self._early_ts.items()
+                       if t < cutoff]
+            for rid in orphans:
+                self._early.pop(rid, None)
+                del self._early_ts[rid]
+        for _ in orphans:
+            self.metrics.counter("early_orphans_gced").inc()
 
     def drain(self, timeout: Optional[float] = None) -> bool:
         """Block until every admitted request has resolved."""
@@ -665,6 +764,14 @@ class AsyncServer:
                         "shutdown", req_id=r.req_id, user_id=r.user_id))
         self._stop.set()
         self._wake_all()
+        # flush the delayed-resubmit queue: entries not yet due when the
+        # maintenance thread stops must still resolve their futures
+        with self._lock:
+            flush, self._delayed = list(self._delayed), []
+        for _, _, rid, _, cause in flush:
+            self._reject(rid, Rejected(
+                "shutdown", f"retry abandoned at shutdown ({cause})",
+                req_id=rid))
         for t in self._threads.values():
             t.join(timeout=5.0)
         if self._maint_thread is not None:

@@ -310,6 +310,52 @@ class SpanTracer:
         with self._lock:
             self._batches.append(record)
 
+    # ---- cross-process bridging ------------------------------------------
+    def drain_orphans(self) -> List[Tuple[int, float, str, Dict]]:
+        """Drain the orphan buffer: ``(rid, t, name, attrs)`` rows, spans
+        encoded as ``span:<name>`` with ``attrs['_t0']``. A worker-side
+        tracer (no request ever binds, so EVERY engine emission lands here)
+        uses this as its export queue — the frontend replays the rows onto
+        the real request timelines after mapping the worker clock."""
+        with self._lock:
+            rows = list(self._orphans)
+            self._orphans.clear()
+        return rows
+
+    def drain_batches(self) -> List[BatchRecord]:
+        """Drain the batch-record ring (worker-side export queue)."""
+        with self._lock:
+            rows = list(self._batches)
+            self._batches.clear()
+        return rows
+
+    def ingest_event(self, rid: int, t: float, name: str, **attrs) -> None:
+        """``event_rid`` with a caller-supplied timestamp — replaying a
+        remote worker's event at its (clock-mapped) original time instead
+        of the replay time."""
+        with self._lock:
+            tr = self._by_rid.get(rid)
+            if tr is not None:
+                tr.events.append((t, name, attrs))
+            else:
+                self._orphans.append((rid, t, name, attrs))
+
+    def ingest_span(self, rid: int, name: str, t0: float, t1: float,
+                    **attrs) -> None:
+        """Like ``span_rid`` but for REMOTE spans whose times crossed a
+        clock mapping: clamps the span into the trace's own window so a
+        worker/frontend clock-offset estimate off by a transit time can
+        never produce a span that starts before its request's submit (which
+        would break Perfetto containment)."""
+        with self._lock:
+            tr = self._by_rid.get(rid)
+            if tr is None:
+                attrs["_t0"] = t0
+                self._orphans.append((rid, t1, "span:" + name, attrs))
+                return
+            t0 = max(t0, tr.t0)
+            tr.spans.append((name, t0, max(t1, t0), attrs))
+
     # ---- export ----------------------------------------------------------
     def snapshot(self, include_active: bool = False) -> List[Dict]:
         with self._lock:
