@@ -62,6 +62,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.core.jct import LinearProxyJCT, Sample
+from repro.core.kv_policy import KVLifecycle, bucket as _bucket
+from repro.core.offload import (HostKVStore, OffloadPolicy,
+                                TieredPrefixCache)
 from repro.core.prefix_cache import PrefixCache, token_chain
 from repro.core.scheduler import Request, Scheduler
 from repro.models import transformer as tfm
@@ -69,18 +72,6 @@ from repro.models.layers import PAD_POS
 from repro.models.model import cast_params
 from repro.runtime.fault_tolerance import NaNGuard
 from repro.serving.tracing import BatchRecord, JCTCalibrationMonitor
-
-
-def _bucket(n: int, sizes: Sequence[int]) -> int:
-    for s in sizes:
-        if n <= s:
-            return s
-    # grow geometrically past the largest configured bucket — clamping to
-    # sizes[-1] would truncate (and crash) requests longer than the table
-    s = sizes[-1]
-    while s < n:
-        s *= 2
-    return s
 
 
 @dataclasses.dataclass
@@ -111,6 +102,20 @@ class EngineConfig:
     autotune_pack: bool = True         # retune both from the profile() fit
     pack_inflation: float = 2.0        # max anchor-step slowdown autotune
                                        # accepts vs a typical solo step
+    offload: bool = False              # DRAM tier: evicted prefix blocks
+                                       # demote to a HostKVStore instead of
+                                       # being discarded (paper §9)
+    host_cache_bytes: int = 256 << 20  # DRAM tier capacity per instance
+    offload_host_bw: Optional[float] = None
+                                       # override the OffloadPolicy's link
+                                       # bandwidth (bytes/s). None = the
+                                       # ChipSpec value, later replaced by
+                                       # profile()'s measured bandwidth.
+                                       # The worth_restoring economics are
+                                       # priced for the TARGET chip, so CPU
+                                       # smoke/benchmark runs of reduced
+                                       # models pass a large value here to
+                                       # force the restore path.
 
 
 class PrefillOnlyEngine:
@@ -129,8 +134,23 @@ class PrefillOnlyEngine:
         # submit, cancel, shed, and probe backlog — the forward itself runs
         # outside the lock so probes never wait on compute.
         self.lock = threading.RLock()
-        self.cache = PrefixCache(ecfg.cache_capacity_tokens // ecfg.block_size,
-                                 ecfg.block_size)
+        # KV keep/discard has ONE owner: every keep-budget / residency /
+        # insert-bound decision in this file asks self.kv (kv_policy).
+        self.kv = KVLifecycle(block_size=ecfg.block_size,
+                              kv_keep_tokens=ecfg.kv_keep_tokens,
+                              buckets=ecfg.suffix_buckets)
+        if ecfg.offload:
+            # hierarchical KV memory: device blocks demote to host DRAM on
+            # eviction, restore on match when cheaper than recompute
+            self.cache: PrefixCache = TieredPrefixCache(
+                ecfg.cache_capacity_tokens // ecfg.block_size,
+                ecfg.block_size,
+                host_store=HostKVStore(ecfg.host_cache_bytes), cfg=cfg,
+                policy=OffloadPolicy(host_bw=ecfg.offload_host_bw))
+        else:
+            self.cache = PrefixCache(
+                ecfg.cache_capacity_tokens // ecfg.block_size,
+                ecfg.block_size)
         self.jct_model = LinearProxyJCT()
         # usable_prefix hook: Algorithm-1 scores must price requests against
         # the prefix a forward would actually reuse, matching the hit-aware
@@ -195,9 +215,27 @@ class PrefillOnlyEngine:
                 jax.block_until_ready(logits)
                 samples.append((n, 0, time.perf_counter() - t0))
         self.jct_model.fit(samples)
+        if (isinstance(self.cache, TieredPrefixCache)
+                and self.ecfg.offload_host_bw is None):
+            # override the ChipSpec host-bandwidth constant with THIS host's
+            # measured device<->host copy rate: worth_restoring's break-even
+            # then prices transfers the way this machine actually pays them.
+            # An explicit offload_host_bw config wins over the measurement.
+            self.cache.policy.host_bw = self._measure_host_bw()
         if self.ecfg.autotune_pack:
             self.autotune_packing(ref_len=max(lengths))
         return self.jct_model.pearson_r
+
+    def _measure_host_bw(self, nbytes: int = 8 << 20) -> float:
+        """Measured device->host->device round-trip bandwidth (bytes/s)."""
+        arr = jnp.zeros((nbytes // 4,), jnp.float32)
+        jax.block_until_ready(arr)
+        t0 = time.perf_counter()
+        host = np.asarray(arr)                       # device -> host
+        back = jnp.asarray(host)                     # host -> device
+        jax.block_until_ready(back)
+        dt = max(time.perf_counter() - t0, 1e-9)
+        return 2.0 * nbytes / dt
 
     def autotune_packing(self, ref_len: int) -> Tuple[int, int]:
         """Tune ``pack_token_budget`` / ``max_pack_requests`` from the fitted
@@ -245,7 +283,8 @@ class PrefillOnlyEngine:
                     allowed_tokens=tuple(allowed_tokens) if allowed_tokens else None,
                     deadline=deadline)
         with self.lock:
-            r.n_cached_at_arrival = self.cache.match_len(r.chain)
+            # probe_len: serveable prefix incl. the host tier, restore-free
+            r.n_cached_at_arrival = self.cache.probe_len(r.chain)
             self.queue.append(r)
         return r.req_id
 
@@ -272,7 +311,7 @@ class PrefillOnlyEngine:
                         now + self.jct_model.predict(
                             r.n_input, self._usable_prefix_len(
                                 r.n_input,
-                                self.cache.match_blocks(r.chain)))
+                                self.cache.probe_blocks(r.chain)))
                         > r.deadline):
                     shed.append(r)
                 else:
@@ -321,11 +360,11 @@ class PrefillOnlyEngine:
         with self.lock:
             return self.jct_model.predict(
                 n_input, self._usable_prefix_len(
-                    n_input, self.cache.match_blocks(chain)))
+                    n_input, self.cache.probe_blocks(chain)))
 
     def cached_prefix_len(self, chain: Tuple[int, ...]) -> int:
         with self.lock:
-            return self.cache.match_len(chain)
+            return self.cache.probe_len(chain)
 
     def probe(self, n_input: int,
               chain: Tuple[int, ...] = ()) -> Tuple[float, float, int]:
@@ -336,7 +375,7 @@ class PrefillOnlyEngine:
         (the three values describe one consistent cache/queue state)."""
         with self.lock:
             return (self.pending_jct(), self.predict_jct(n_input, chain),
-                    self.cache.match_len(chain))
+                    self.cache.probe_len(chain))
 
     @property
     def last_step_ids(self) -> List[int]:
@@ -375,6 +414,108 @@ class PrefillOnlyEngine:
         misses still co-pack). Takes effect at the next batch formation."""
         with self.lock:
             self.degraded = bool(flag)
+
+    # ---- DRAM offload tier (paper §9) ---------------------------------------
+    def _match_restoring(self, chain: Tuple[int, ...],
+                         rid: Optional[int] = None) -> int:
+        """``match_blocks(touch=True)`` with restore observability: on the
+        tiered cache a match can pull blocks back from the host store —
+        time it, count it, emit the ``restore`` span + series. Execution
+        path only; call under the engine lock."""
+        c = self.cache
+        if not isinstance(c, TieredPrefixCache):
+            return c.match_blocks(chain, touch=True)
+        r0, b0 = c.restored_blocks, c.host.restore_bytes
+        t0 = time.perf_counter()
+        matched = c.match_blocks(chain, now=t0, touch=True)
+        blocks = c.restored_blocks - r0
+        if blocks:
+            self._note_tier("restore", rid, blocks,
+                            c.host.restore_bytes - b0, t0,
+                            time.perf_counter())
+        return matched
+
+    def _note_tier(self, kind: str, rid: Optional[int], blocks: int,
+                   nbytes: int, t0: float, t1: float) -> None:
+        """Export one restore/prefetch episode as Prometheus series and (when
+        a request id is known) a SpanTracer phase."""
+        m, inst = self.metrics, self.instance_name
+        if m is not None:
+            m.counter(f"kv_{kind}_blocks", inst,
+                      help=f"KV blocks moved host->device by {kind}").inc(
+                blocks)
+            m.counter(f"kv_{kind}_bytes", inst).inc(nbytes)
+            m.histogram(f"kv_{kind}_seconds", inst,
+                        help=f"wall seconds per {kind} episode").observe(
+                t1 - t0)
+        tr = self.tracer
+        if tr is not None and rid is not None:
+            tr.span_rid(rid, kind, t0, t1, instance=inst,
+                        blocks=blocks, bytes=int(nbytes))
+
+    def restore_estimate(self, chain: Tuple[int, ...]) -> Dict[str, float]:
+        """Restorable host-tier continuation of ``chain`` and its priced
+        transfer time — admission folds ``restore_s`` into the JCT bound,
+        the router-time prefetch decides off ``blocks``. Zeros on an
+        un-tiered engine."""
+        c = self.cache
+        if not isinstance(c, TieredPrefixCache):
+            return {"device_blocks": 0, "blocks": 0, "bytes": 0,
+                    "restore_s": 0.0}
+        with self.lock:
+            return c.restore_estimate(chain)
+
+    def prefetch_prefix(self, chain: Tuple[int, ...],
+                        rid: Optional[int] = None) -> int:
+        """Async host->device prefetch of ``chain``'s restorable
+        continuation, triggered at routing time (the router knows the
+        usable prefix before the forward runs). Returns the block count
+        scheduled (0 = nothing restorable / no tier). The transfer runs on
+        a daemon thread: restore into the device cache under the lock, then
+        materialize the payloads as device arrays OUTSIDE the lock so the
+        execute-path concatenate hits device-resident KV."""
+        c = self.cache
+        if not isinstance(c, TieredPrefixCache):
+            return 0
+        with self.lock:
+            est = c.restore_estimate(chain)
+        if not est["blocks"]:
+            return 0
+        threading.Thread(target=self._prefetch_worker,
+                         args=(tuple(chain), rid),
+                         daemon=True, name="kv-prefetch").start()
+        return int(est["blocks"])
+
+    def _prefetch_worker(self, chain: Tuple[int, ...],
+                         rid: Optional[int]) -> None:
+        c = self.cache
+        t0 = time.perf_counter()
+        with self.lock:
+            r0, b0 = c.restored_blocks, c.host.restore_bytes
+            matched = c.match_blocks(chain, now=t0, touch=True)
+            blocks = c.restored_blocks - r0
+            nbytes = c.host.restore_bytes - b0
+            hs = chain[matched - blocks:matched] if blocks else ()
+            host_payloads = [(h, c.blocks[h].payload) for h in hs
+                             if h in c.blocks
+                             and c.blocks[h].payload is not None]
+        if not blocks:
+            return
+        # host -> device outside the lock (the copy is the slow part)
+        dev = [(h, tuple(jnp.asarray(p) for p in payload))
+               for h, payload in host_payloads]
+        for _, payload in dev:
+            jax.block_until_ready(payload)
+        with self.lock:
+            for h, payload in dev:
+                blk = c.blocks.get(h)
+                # only upgrade a still-host-resident numpy payload — never
+                # clobber KV a concurrent insert refreshed on device
+                if blk is not None and blk.payload is not None and isinstance(
+                        blk.payload[0], np.ndarray):
+                    blk.payload = payload
+        self._note_tier("prefetch", rid, blocks, nbytes, t0,
+                        time.perf_counter())
 
     def step(self) -> Optional[int]:
         """One scheduling step: pick (Algorithm 1), form a packed batch,
@@ -472,6 +613,18 @@ class PrefillOnlyEngine:
             m.counter(f"pack_{kind}_steps", self.instance_name).inc()
             m.histogram("batch_wall_seconds", self.instance_name).observe(
                 rec.wall)
+            if isinstance(self.cache, TieredPrefixCache):
+                hs = self.cache.host.stats()
+                m.gauge("host_kv_used_bytes", self.instance_name,
+                        help="DRAM offload tier occupancy").set(
+                    hs["used_bytes"])
+                m.gauge("host_kv_blocks", self.instance_name).set(
+                    hs["blocks"])
+                m.gauge("kv_offload_blocks", self.instance_name,
+                        help="KV blocks demoted device->host (cumulative)"
+                        ).set(hs["offloads"])
+                m.gauge("kv_offload_bytes", self.instance_name).set(
+                    hs["offload_bytes"])
         tr = self.tracer
         if tr is None:
             return
@@ -507,9 +660,15 @@ class PrefillOnlyEngine:
         return prefix_len
 
     def _usable_prefix(self, r: Request, touch: bool = False) -> int:
-        """Bucketed prefix-reuse length for ``r`` against the current cache."""
-        return self._usable_prefix_len(
-            r.n_input, self.cache.match_blocks(r.chain, touch=touch))
+        """Bucketed prefix-reuse length for ``r`` against the current cache.
+        Non-touch callers (batch formation, inflight pricing) get the
+        side-effect-free probe — on the tiered cache an eager match here
+        would restore host blocks for requests that may never run."""
+        if touch:
+            matched = self.cache.match_blocks(r.chain, touch=True)
+        else:
+            matched = self.cache.probe_blocks(r.chain)
+        return self._usable_prefix_len(r.n_input, matched)
 
     def _form_batch(self, now: float) -> Optional[List[Request]]:
         """Algorithm 1 pick + cost-modeled first-fit-decreasing backfill.
@@ -634,7 +793,7 @@ class PrefillOnlyEngine:
         # cache probe + pin under the lock; the forward itself runs outside
         # it so router/admission probes never block on compute
         with self.lock:
-            matched = self.cache.match_blocks(r.chain, touch=True)
+            matched = self._match_restoring(r.chain, rid=r.req_id)
             prefix_len = self._usable_prefix_len(r.n_input, matched)
             use_blocks = prefix_len // bs
             r.n_cached_at_start = prefix_len
@@ -642,11 +801,11 @@ class PrefillOnlyEngine:
             self.total_tokens += r.n_input
             self.padded_slots += prefix_len + _bucket(
                 r.n_input - prefix_len, self.ecfg.suffix_buckets)
-            keep = min(r.n_input, self.ecfg.kv_keep_tokens)
+            keep = self.kv.keep(r.n_input)
             # chain already resident past the keep bound: the insert below
             # would only re-slice and re-touch existing blocks — skip it
             # (the match walk above refreshed their LRU standing)
-            resident = matched * bs >= (keep // bs) * bs
+            resident = self.kv.resident(matched, r.n_input)
             if prefix_len:
                 self.cache.pin(r.chain, use_blocks)
                 payloads = self.cache.match_payloads(r.chain)[:use_blocks]
@@ -665,7 +824,7 @@ class PrefillOnlyEngine:
             if prefix_len:
                 self.cache.unpin(r.chain, use_blocks)
             if not resident:
-                n_insertable = max(0, min(keep, kv_from + n_new) - kv_from)
+                n_insertable = self.kv.insertable_tokens(keep, kv_from, n_new)
                 n_blocks_new = n_insertable // bs
                 payloads_all = self.cache.match_payloads(
                     r.chain)[:use_blocks]
@@ -680,11 +839,8 @@ class PrefillOnlyEngine:
 
     def _run_fresh(self, tokens: Sequence[int], keep: int = 0):
         S = _bucket(len(tokens), self.ecfg.suffix_buckets)
-        # bucket the keep budget too: kv_keep only bounds how much KV leaves
-        # each layer (keeping more is safe, callers slice), and a raw
-        # per-request value would put every distinct length in its own jit key
-        keep_pad = min(_bucket(keep, self.ecfg.suffix_buckets) if keep else 0,
-                       S)
+        # jit-key bucketing of the keep budget is owned by KVLifecycle
+        keep_pad = self.kv.keep_pad(keep, S)
         key = (S, keep_pad)
         self._last_jit = ("fresh", key, key not in self._fresh_fns)
         self._last_shape = {"S": S}
@@ -734,7 +890,7 @@ class PrefillOnlyEngine:
         prefs: List[Tuple[int, List, int]] = []
         with self.lock:
             for r in batch:
-                matched = self.cache.match_blocks(r.chain, touch=True)
+                matched = self._match_restoring(r.chain, rid=r.req_id)
                 plen = self._usable_prefix_len(r.n_input, matched)
                 r.n_cached_at_start = plen
                 payloads = []
@@ -768,12 +924,8 @@ class PrefillOnlyEngine:
         # blocks). A chain already resident past its keep bound needs NO
         # fresh KV at all — steady-state repeat traffic then skips both the
         # forward's kv gather and the insert-side slicing entirely.
-        keeps = []
-        for r, (p, _, matched) in zip(batch, prefs):
-            keep_total = (min(r.n_input, self.ecfg.kv_keep_tokens)
-                          // bs) * bs
-            keeps.append(0 if matched * bs >= keep_total
-                         else max(0, keep_total - p))
+        keeps = [self.kv.keep_new(r.n_input, p, matched)
+                 for r, (p, _, matched) in zip(batch, prefs)]
         # pad the gather length to a bucket so jit keys stay bounded; on the
         # hit path tie it to S outright (sum(keeps) <= packed suffix tokens)
         if not sum(keeps):
@@ -923,10 +1075,9 @@ class PrefillOnlyEngine:
     def _run_suffix(self, tokens, pk, pv, prefix_len: int, keep: int):
         S = _bucket(len(tokens), self.ecfg.suffix_buckets)
         P = pk.shape[2]
-        keep_new = max(0, min(keep, prefix_len + S) - prefix_len)
-        # bucket the fresh-KV budget in the jit key (see _run_fresh)
-        keep_pad = min(_bucket(keep_new, self.ecfg.suffix_buckets)
-                       if keep_new else 0, S)
+        keep_new = self.kv.suffix_keep_new(keep, prefix_len, S)
+        # jit-key bucketing of the fresh-KV budget (see _run_fresh)
+        keep_pad = self.kv.keep_pad(keep_new, S)
         key = (S, P, keep_pad)
         self._last_jit = ("suffix", key, key not in self._suffix_fns)
         self._last_shape = {"S": S, "pmax": P}

@@ -5,7 +5,10 @@ d_ff)`` intermediates of the MLP (≈14x one layer's KV), not by the KV cache.
 Chunking *only* the token-wise (linear) layers bounds those intermediates at
 ``(chunk, d_ff)`` while attention still sees the whole sequence — so attention
 kernel efficiency is untouched and the request finishes in ONE forward pass
-(the property that makes suffix-KV discard possible).
+(the property that makes suffix-KV discard possible). The discard itself is
+layer-wise and structural — see ``models/transformer.forward_full`` (the KV
+keep-slice is the only scan output) and ``core.kv_policy.KVLifecycle``, the
+single owner of the keep arithmetic.
 
 TPU/XLA realization: ``lax.map`` (a scan) over sequence chunks. XLA's buffer
 assignment then keeps exactly one chunk of intermediates live, and the scan

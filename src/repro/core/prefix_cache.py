@@ -114,6 +114,23 @@ class PrefixCache:
         """Longest resident prefix, in tokens."""
         return self.match_blocks(chain, now, touch) * self.block_size
 
+    def probe_blocks(self, chain: Chain) -> int:
+        """SERVEABLE prefix in blocks, side-effect free — what scheduling /
+        routing / admission probes should price against. On the base cache
+        this is just the resident run; the tiered cache extends it with the
+        host-restorable continuation WITHOUT performing the restore (the
+        restore happens on the execution path or via async prefetch)."""
+        n = 0
+        for h in chain:
+            if h not in self.blocks:
+                break
+            n += 1
+        return n
+
+    def probe_len(self, chain: Chain) -> int:
+        """``probe_blocks`` in tokens."""
+        return self.probe_blocks(chain) * self.block_size
+
     def match_payloads(self, chain: Chain, now: float = 0.0) -> List[Any]:
         out = []
         for h in chain:

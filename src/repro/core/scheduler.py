@@ -71,13 +71,20 @@ class Scheduler:
         """Algorithm 1 priority of one request (lower runs sooner)."""
         if self.policy == "srjf":
             return self.jct_model.predict(r.n_input, r.n_cached_at_arrival)
+        # side-effect-free probes: scoring walks every queued request each
+        # step, and on the tiered cache a match_* call would eagerly restore
+        # host blocks — probe_blocks prices the restorable tier read-only
         if cache is None:
             n_cached = 0
         elif self.usable_prefix is not None:
-            n_cached = self.usable_prefix(r.n_input,
-                                          cache.match_blocks(r.chain))
+            n_cached = self.usable_prefix(
+                r.n_input, cache.probe_blocks(r.chain)
+                if hasattr(cache, "probe_blocks")
+                else cache.match_blocks(r.chain))
         else:
-            n_cached = cache.match_len(r.chain)
+            n_cached = (cache.probe_len(r.chain)
+                        if hasattr(cache, "probe_len")
+                        else cache.match_len(r.chain))
         jct = self.jct_model.predict(r.n_input, n_cached)
         return jct - self.lam * (now - r.arrival)
 

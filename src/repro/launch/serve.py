@@ -50,14 +50,17 @@ from repro.serving import (AdmissionController, AsyncServer,
 def make_pool(arch: str, n_instances: int = 2, *, reduced: bool = True,
               policy: str = "srjf_calibrated", lam: float = 0.05,
               cache_tokens: int = 4096, seed: int = 0,
-              profile: bool = False,
+              profile: bool = False, offload: bool = False,
+              host_cache_mb: int = 256,
               profile_lengths=(32, 64, 128)) -> InstancePool:
     """Build N engine instances over ONE set of materialized weights.
 
     ``profile=True`` runs the paper's profile step per instance: fits the
     JCT linear proxy on measured forwards (so routing/admission predictions
     start calibrated, not from the generic default) and auto-tunes the
-    prepacking budget from the fitted curve.
+    prepacking budget from the fitted curve. ``offload=True`` gives every
+    instance the DRAM KV tier (``host_cache_mb`` per instance): evicted
+    prefix blocks demote to host memory and restore instead of recomputing.
     """
     cfg = get_config(arch)
     if reduced:
@@ -67,7 +70,8 @@ def make_pool(arch: str, n_instances: int = 2, *, reduced: bool = True,
 
     def make_engine(name: str) -> PrefillOnlyEngine:
         eng = PrefillOnlyEngine(cfg, params, EngineConfig(
-            policy=policy, lam=lam, cache_capacity_tokens=cache_tokens))
+            policy=policy, lam=lam, cache_capacity_tokens=cache_tokens,
+            offload=offload, host_cache_bytes=host_cache_mb << 20))
         if profile:
             eng.profile(profile_lengths)
         return eng
@@ -80,7 +84,8 @@ def make_pool(arch: str, n_instances: int = 2, *, reduced: bool = True,
 def make_worker_pool(arch: str, n_workers: int, *, reduced: bool = True,
                      policy: str = "srjf_calibrated", lam: float = 0.05,
                      cache_tokens: int = 4096, seed: int = 0,
-                     profile: bool = False,
+                     profile: bool = False, offload: bool = False,
+                     host_cache_mb: int = 256,
                      rpc_fault_hook=None,
                      drain_grace: float = 30.0):
     """Process-mode pool: one supervised engine WORKER PROCESS per instance
@@ -88,11 +93,15 @@ def make_worker_pool(arch: str, n_workers: int, *, reduced: bool = True,
     supervisor that heartbeats, declares death, and restarts them. The
     supervision constants are sized for real engines on CPU: a jit compile
     can hold the GIL for seconds, so the miss budget tolerates ~6s of
-    unanswered beats before declaring a freeze."""
+    unanswered beats before declaring a freeze. ``offload`` rides the spec
+    into each worker's EngineConfig; the worker's hello reports the tier
+    back so the frontend only spends prefetch RPCs on tiered workers."""
+    ecfg = ({"offload": True, "host_cache_bytes": host_cache_mb << 20}
+            if offload else {})
     specs = {f"inst{i}": {"kind": "engine", "arch": arch, "reduced": reduced,
                           "policy": policy, "lam": lam,
                           "cache_tokens": cache_tokens, "seed": seed,
-                          "profile": profile}
+                          "profile": profile, "ecfg": ecfg}
              for i in range(n_workers)}
     return make_process_pool(
         specs, lease=30.0, heartbeat_interval=0.5, miss_budget=12,
@@ -178,7 +187,10 @@ def serve_trace(arch: str = "qwen1.5-0.5b",
                 chaos: Optional[ChaosConfig] = None,
                 drain_timeout: Optional[float] = 30.0,
                 trace_dump: Optional[str] = None,
-                trace_capacity: int = 4096) -> Dict:
+                trace_capacity: int = 4096,
+                offload: bool = False,
+                host_cache_mb: int = 256,
+                cache_tokens: int = 4096) -> Dict:
     """Replay a paper workload through the AsyncServer. Returns latency
     stats over SERVED requests plus rejection counts and a telemetry dump.
 
@@ -207,12 +219,15 @@ def serve_trace(arch: str = "qwen1.5-0.5b",
     if workers and pool is None:
         pool, sup = make_worker_pool(
             arch, workers, policy=policy, lam=lam, seed=seed,
-            profile=profile,
+            profile=profile, offload=offload, host_cache_mb=host_cache_mb,
+            cache_tokens=cache_tokens,
             rpc_fault_hook=plan.rpc_fault if plan is not None else None,
             drain_grace=min(drain_timeout or 30.0, 30.0))
     elif pool is None:
         pool = make_pool(arch, n_instances, policy=policy, lam=lam,
-                         seed=seed, profile=profile)
+                         seed=seed, profile=profile, offload=offload,
+                         host_cache_mb=host_cache_mb,
+                         cache_tokens=cache_tokens)
     if plan is not None and sup is None:
         wrap_pool(pool, plan)
     ctrl = None
@@ -224,8 +239,16 @@ def serve_trace(arch: str = "qwen1.5-0.5b",
         eng_cfg = getattr(next(iter(pool.engines.values())), "cfg", None)
         if eng_cfg is None:
             eng_cfg = reduce_config(get_config(arch), hybrid_chunk=0)
+        # price the engines' actual KV lifecycle into the MIL gate: finite
+        # kv_keep means peak-layer suffix footprint, not all-layers
+        any_eng = next(iter(pool.engines.values()))
+        kv_keep = getattr(getattr(any_eng, "ecfg", None),
+                          "kv_keep_tokens", None)
+        if kv_keep is not None and kv_keep >= 10**9:
+            kv_keep = None
         ctrl = AdmissionController(max_input_tokens=max_input_tokens,
-                                   memory_model=MemoryModel(eng_cfg))
+                                   memory_model=MemoryModel(eng_cfg),
+                                   kv_keep=kv_keep)
     # always-on request-lifecycle tracing: the ring bounds memory and the
     # per-event cost is one lock + list append (<3% on the packing
     # benchmark — see BENCH_packing.json), so the replay always records
@@ -397,6 +420,15 @@ def main():
                     help="absolute floor on the per-batch deadline, sec")
     ap.add_argument("--brownout", action="store_true",
                     help="arm the graceful-degradation ladder")
+    ap.add_argument("--offload", action="store_true",
+                    help="DRAM KV tier: evicted prefix blocks demote to "
+                         "host memory and restore (or router-prefetch) "
+                         "instead of recomputing")
+    ap.add_argument("--host-cache-mb", type=int, default=256,
+                    help="DRAM tier capacity per instance, MiB")
+    ap.add_argument("--cache-tokens", type=int, default=4096,
+                    help="device prefix-KV cache capacity per instance, "
+                         "tokens")
     ap.add_argument("--drain-timeout", type=float, default=30.0,
                     help="max seconds to drain on completion or SIGTERM")
     chaos = ap.add_argument_group(
@@ -460,7 +492,10 @@ def main():
                       watchdog_min_deadline=args.watchdog_min_deadline,
                       brownout=args.brownout, chaos=chaos_cfg,
                       drain_timeout=args.drain_timeout,
-                      trace_dump=args.trace_dump)
+                      trace_dump=args.trace_dump,
+                      offload=args.offload,
+                      host_cache_mb=args.host_cache_mb,
+                      cache_tokens=args.cache_tokens)
     for k, v in out.items():
         if k == "metrics":
             if args.dump_metrics:

@@ -200,13 +200,22 @@ def run_live_smoke(n_requests: int = 12, arch: str = "qwen1.5-0.5b",
 
     cfg = reduce_config(get_config(arch), hybrid_chunk=0)
     sup = None
+    # tier-exercising engine shape: the device cache holds only 4 blocks
+    # (64 tokens — two 40-token requests' kept KV), so the first submission
+    # round FORCES evictions into the DRAM tier; re-submitting the same
+    # token lists then restores/prefetches from host. offload_host_bw is
+    # pinned huge because worth_restoring prices the TARGET chip's
+    # recompute rate, which this CPU box can't approach.
+    tier_ecfg = {"max_pack_requests": 1, "cache_capacity_tokens": 64,
+                 "offload": True, "offload_host_bw": 1e18,
+                 "prefix_bucket_blocks": 1}
     if workers:
         from repro.serving import make_process_pool, wire_supervisor
         # solo packing + same-length requests below: after the first
         # (compile) step every step is warm -> JCT monitor has samples
         specs = {f"inst{i}": {"kind": "engine", "arch": arch,
                               "reduced": True, "seed": 0,
-                              "ecfg": {"max_pack_requests": 1}}
+                              "ecfg": dict(tier_ecfg)}
                  for i in range(workers)}
         pool, sup = make_process_pool(
             specs, lease=30.0, heartbeat_interval=0.4, miss_budget=12,
@@ -224,8 +233,7 @@ def run_live_smoke(n_requests: int = 12, arch: str = "qwen1.5-0.5b",
         params = materialize(jax.random.PRNGKey(0), api.defs(), jnp.float32)
 
         def make_engine(name: str) -> PrefillOnlyEngine:
-            return PrefillOnlyEngine(cfg, params,
-                                     EngineConfig(max_pack_requests=1))
+            return PrefillOnlyEngine(cfg, params, EngineConfig(**tier_ecfg))
 
         pool = InstancePool(make_engine)
         pool.scale_to(["inst0"])
@@ -245,12 +253,20 @@ def run_live_smoke(n_requests: int = 12, arch: str = "qwen1.5-0.5b",
     base = f"http://{host}:{port}"
     try:
         rng = np.random.default_rng(0)
-        futs = [server.submit(f"u{i}",
-                              rng.integers(0, cfg.vocab_size, 40).tolist(),
-                              allowed_tokens=(5, 9))
-                for i in range(n_requests)]
+        token_lists = [rng.integers(0, cfg.vocab_size, 40).tolist()
+                       for _ in range(n_requests)]
+        # round 1: distinct 40-token requests overflow the 4-block device
+        # cache -> evictions demote kept KV into the host tier
+        futs = [server.submit(f"u{i}", toks, allowed_tokens=(5, 9))
+                for i, toks in enumerate(token_lists)]
         assert server.drain(timeout=600.0 if workers else 120.0), \
             "drain timed out"
+        # round 2: the SAME token lists — their prefixes now live host-side,
+        # so submits trigger router-time prefetch and executes restore
+        futs += [server.submit(f"u{i}", toks, allowed_tokens=(5, 9))
+                 for i, toks in enumerate(token_lists)]
+        assert server.drain(timeout=600.0 if workers else 120.0), \
+            "drain timed out (round 2)"
         results = [f.result() for f in futs]
         delivered = [r for r in results if isinstance(r, dict)]
         assert delivered, f"nothing delivered: {results}"
@@ -270,6 +286,24 @@ def run_live_smoke(n_requests: int = 12, arch: str = "qwen1.5-0.5b",
             f"jct_residual_seconds histogram absent (families: {fams})"
         print(f"metrics ok: {len(series)} series, "
               f"{len(fams)} histogram families")
+
+        # hierarchical KV memory: the 4-block device cache must have
+        # demoted blocks host-side in round 1, and round 2 must have
+        # brought some back (execute-path restore and/or router prefetch)
+        def _total(name: str) -> float:
+            return sum(s["value"] for s in series.get(name, []))
+        offloaded = _total("prefillonly_kv_offload_blocks")
+        restored = _total("prefillonly_kv_restore_blocks")
+        prefetched = _total("prefillonly_kv_prefetch_blocks")
+        assert offloaded > 0, "no KV blocks demoted to the host tier"
+        assert restored + prefetched > 0, \
+            "no KV blocks came back from the host tier"
+        assert "prefillonly_host_kv_used_bytes" in series, \
+            "host tier occupancy gauge absent"
+        triggers = _total("prefillonly_prefetches_triggered")
+        print(f"offload tier ok: {offloaded:.0f} blocks demoted, "
+              f"{restored:.0f} restored + {prefetched:.0f} prefetched "
+              f"({triggers:.0f} router-time prefetch triggers)")
 
         timeline = validate_trace_jsonl(_fetch(base + "/trace"))
         print(f"trace ok: complete submit→deliver timeline for req "

@@ -120,7 +120,13 @@ def forward_full(params: Dict, cfg: ModelConfig, *,
 
     ``kv_keep`` is the PrefillOnly prefix budget: only the first ``kv_keep``
     tokens' KV leave each layer (suffix KV discard — the rest is freed by XLA
-    as soon as the layer's attention is done, because it is not a scan output).
+    as soon as the layer's attention is done, because it is not a scan
+    output). This is the LAYER-WISE discard the memory hierarchy is built
+    on: at any instant at most ONE layer's full-length K/V is live, so peak
+    prefill memory prices one transient layer plus the kept slice —
+    ``core.kv_policy.KVLifecycle`` owns the keep arithmetic callers pass in
+    here, and ``MemoryModel.peak_bytes(..., kv_keep=...)`` prices exactly
+    this shape.
 
     Prepacked prefill: ``positions`` (B, S) overrides the default arange —
     packed batches restart RoPE positions at every segment boundary — and

@@ -16,6 +16,7 @@ class ChipSpec:
     hbm_bytes: float            # bytes
     ici_bw: float               # bytes/s per link
     vmem_bytes: float = 128 * 2**20
+    host_bw: float = 25e9       # bytes/s host<->device (PCIe/DMA)
 
 
 TPU_V5E = ChipSpec(
@@ -47,3 +48,9 @@ def memory_seconds(bytes_moved: float, chips: int = 1,
 def collective_seconds(bytes_moved: float, chips: int = 1,
                        chip: ChipSpec = DEFAULT_CHIP) -> float:
     return bytes_moved / (chips * chip.ici_bw)
+
+
+def host_transfer_seconds(bytes_moved: float,
+                          chip: ChipSpec = DEFAULT_CHIP) -> float:
+    """Host<->device copy time over the PCIe/DMA link (offload tier)."""
+    return bytes_moved / chip.host_bw

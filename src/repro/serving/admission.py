@@ -71,9 +71,15 @@ class AdmissionController:
                  chunk: int = 2048, deadline_slack: float = 1.0,
                  adapt: bool = True, adapt_window: int = 64,
                  shed_target: float = 0.05, adapt_rate: float = 1.25,
-                 max_slack: float = 4.0, metrics=None):
+                 max_slack: float = 4.0, metrics=None,
+                 kv_keep: Optional[int] = None):
         if max_input_tokens is None and memory_model is not None:
-            max_input_tokens = memory_model.max_input_length("hybrid", chunk)
+            # kv_keep: price the engines' layer-wise discard (peak-layer
+            # suffix KV + bounded kept slice, see MemoryModel.peak_bytes)
+            # instead of the all-layers footprint — the MIL the gate
+            # enforces matches what the engines can actually serve
+            max_input_tokens = memory_model.max_input_length(
+                "hybrid", chunk, kv_keep=kv_keep)
         self.max_input_tokens = max_input_tokens
         self.deadline_slack = deadline_slack
         self.rejected_infeasible = 0

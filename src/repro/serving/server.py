@@ -337,14 +337,27 @@ class AsyncServer:
         # Probe only when someone needs them — the untraced/no-admission
         # fast path must not pay two extra engine-lock acquisitions.
         pending = predicted = None
+        restore_s = 0.0
         if self.admission is not None or ctx is not None:
             pending = eng.pending_jct()
             predicted = eng.predict_jct(len(tokens),
                                         chains[eng.ecfg.block_size])
+            # tiered engine: the JCT probe counts a host-restorable prefix
+            # as cached, but restoring it costs a PCIe transfer first —
+            # price that into the bound admission checks against
+            est_fn = getattr(eng, "restore_estimate", None)
+            if est_fn is not None:
+                try:
+                    restore_s = float(est_fn(
+                        chains[eng.ecfg.block_size]).get("restore_s", 0.0))
+                except Exception:
+                    restore_s = 0.0
+            predicted += restore_s
         if ctx is not None:
             sp.event(ctx, "route", instance=routed,
                      router=type(self.router).__name__,
-                     pending_jct=pending, predicted_jct=predicted)
+                     pending_jct=pending, predicted_jct=predicted,
+                     restore_s=restore_s)
         if self.admission is not None:
             rej = self.admission.check(len(tokens), deadline, arrival,
                                        pending, predicted, user_id=user_id)
@@ -366,6 +379,22 @@ class AsyncServer:
         if ctx is not None:
             sp.bind(ctx, rid)
             sp.event(ctx, "enqueue", instance=name, req_id=rid)
+        # routing-time prefetch (paper §9): start the host->device transfer
+        # of this request's restorable prefix NOW, so by the time Algorithm 1
+        # picks it the KV is device-resident. ``name`` is the instance that
+        # actually accepted the enqueue (fallback may differ from ``routed``).
+        pf = getattr(live[name], "prefetch_prefix", None)
+        if pf is not None:
+            try:
+                nblk = pf(chains[live[name].ecfg.block_size], rid=rid)
+            except Exception:
+                nblk = 0
+            if nblk:
+                self.metrics.counter(
+                    "prefetches_triggered", name,
+                    help="router-time host->device KV prefetches").inc()
+                if ctx is not None:
+                    sp.event(ctx, "prefetch", instance=name, blocks=nblk)
         with self._lock:
             early = self._early.pop(rid, None)
             self._early_ts.pop(rid, None)

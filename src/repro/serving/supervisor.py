@@ -107,6 +107,8 @@ class RemoteEngine:
         self._step_compiled = False
         self._metrics = None
         self._tracer = None
+        self.offload = False          # set from the worker's hello
+        self._host_kv: Dict = {}      # tier occupancy from the heartbeat
 
     # ---- engine protocol: submission ------------------------------------
     def _wire_req(self, r: Request, now: float) -> Dict:
@@ -354,6 +356,8 @@ class RemoteEngine:
             self._pending_t = recv
             if out.get("stats") is not None:
                 self._stats = out["stats"]
+            if out.get("host_kv") is not None:
+                self._host_kv = out["host_kv"]
             m = self._metrics
         rows = out.get("metrics")
         if m is not None and rows:
@@ -419,6 +423,7 @@ class RemoteEngine:
             self._probe_cache.clear()
             self._pending, self._pending_t = 0.0, -1e9
             self._step_compiled = False
+            self._host_kv = {}
 
     def set_degraded(self, flag: bool) -> None:
         if self._dead:
@@ -429,6 +434,36 @@ class RemoteEngine:
         except RpcError:
             pass     # brownout is advisory; a dead worker restarts fresh
 
+    # ---- offload tier (paper §9) -----------------------------------------
+    def restore_estimate(self, chain) -> Dict:
+        """Restorable host-tier prefix priced by the worker. Zeros when the
+        worker has no tier (hello said so — no RPC spent) or is dead."""
+        zeros = {"device_blocks": 0, "blocks": 0, "bytes": 0,
+                 "restore_s": 0.0}
+        if not self.offload or self._dead:
+            return zeros
+        try:
+            out = self.rpc.call("prefetch",
+                                {"chain": list(chain or ()),
+                                 "estimate": True},
+                                timeout=self.probe_timeout)
+        except RpcError:
+            return zeros
+        return {k: out.get(k, zeros[k]) for k in zeros}
+
+    def prefetch_prefix(self, chain, rid: Optional[int] = None) -> int:
+        """Kick the worker's async host->device prefetch. Advisory like
+        set_degraded: a failed RPC means the execute path restores instead."""
+        if not self.offload or self._dead:
+            return 0
+        try:
+            out = self.rpc.call("prefetch",
+                                {"chain": list(chain or ()), "rid": rid},
+                                timeout=self.probe_timeout)
+        except RpcError:
+            return 0
+        return int(out.get("blocks", 0))
+
     def stats(self) -> Dict:
         if not self._dead:
             try:
@@ -438,7 +473,10 @@ class RemoteEngine:
             except RpcError:
                 pass
         with self.lock:
-            return dict(self._stats) if self._stats else {}
+            out = dict(self._stats) if self._stats else {}
+            if self._host_kv:
+                out.setdefault("host_kv", self._host_kv)
+            return out
 
 
 class WorkerHandle:
@@ -574,8 +612,10 @@ class WorkerSupervisor:
                                 step_timeout=self.step_timeout)
         hello = h.client.call("hello", timeout=15.0)
         h.remote.ecfg.block_size = int(hello["block_size"])
+        h.remote.offload = bool(hello.get("offload"))
         self._log(f"worker {name}: pid={h.pid} port={h.port} "
-                  f"block_size={h.remote.ecfg.block_size}")
+                  f"block_size={h.remote.ecfg.block_size} "
+                  f"offload={h.remote.offload}")
         return h
 
     def pid_of(self, name: str) -> Optional[int]:
@@ -688,7 +728,8 @@ class WorkerSupervisor:
                     pass
                 return
             h.client.retarget("127.0.0.1", h.port)
-            h.client.call("hello", timeout=15.0)
+            hello = h.client.call("hello", timeout=15.0)
+            h.remote.offload = bool(hello.get("offload"))
             h.remote.reset_for_restart()
             h.restart_times.append(time.monotonic())
             h.restart_due = None
@@ -752,7 +793,8 @@ class WorkerSupervisor:
                     h.proc.wait(timeout=5.0)
                 except Exception:
                     pass
-            h.remote.mark_dead()
+            if h.remote is not None:    # spawn may have died pre-handshake
+                h.remote.mark_dead()
             if h.client is not None:
                 h.client.close()
 

@@ -183,11 +183,11 @@ def build_engine(name: str, spec: Dict):
     for k, v in overrides.items():       # JSON has no tuples
         if isinstance(v, list):
             overrides[k] = tuple(v)
-    eng = PrefillOnlyEngine(cfg, params, EngineConfig(
-        policy=spec.get("policy", "srjf_calibrated"),
-        lam=float(spec.get("lam", 0.05)),
-        cache_capacity_tokens=int(spec.get("cache_tokens", 4096)),
-        **overrides))
+    kw = {"policy": spec.get("policy", "srjf_calibrated"),
+          "lam": float(spec.get("lam", 0.05)),
+          "cache_capacity_tokens": int(spec.get("cache_tokens", 4096))}
+    kw.update(overrides)                 # spec["ecfg"] wins over shorthands
+    eng = PrefillOnlyEngine(cfg, params, EngineConfig(**kw))
     if spec.get("profile"):
         eng.profile(tuple(spec.get("profile_lengths", (32, 64, 128))))
     return eng
@@ -265,7 +265,12 @@ class EngineWorker:
         with eng.lock:
             cache = getattr(eng, "cache", None)
             if cache is not None:
-                r.n_cached_at_arrival = cache.match_len(r.chain)
+                # probe, don't match: on a tiered cache an eager match here
+                # would restore host blocks inside the submit RPC
+                r.n_cached_at_arrival = (
+                    cache.probe_len(r.chain)
+                    if hasattr(cache, "probe_len")
+                    else cache.match_len(r.chain))
             eng.queue.append(r)
         return True
 
@@ -362,6 +367,9 @@ class EngineWorker:
                "draining": self._draining}
         with eng.lock:
             out["depth"] = len(eng.queue)
+        host = getattr(getattr(eng, "cache", None), "host", None)
+        if host is not None:     # tier occupancy rides every heartbeat
+            out["host_kv"] = host.stats()
         if p.get("want_metrics", True):
             out["metrics"] = self.registry.dump_state()
         if p.get("want_stats"):
@@ -370,6 +378,25 @@ class EngineWorker:
             except Exception:
                 out["stats"] = None
         return out
+
+    def _op_prefetch(self, p: Dict) -> Dict:
+        """Router-time offload-tier ops: ``estimate`` prices the restorable
+        host prefix (admission), otherwise kick the async host->device
+        prefetch. No-ops (zeros) on engines without a tier."""
+        eng = self.engine
+        chain = tuple(p.get("chain") or ())
+        if p.get("estimate"):
+            est_fn = getattr(eng, "restore_estimate", None)
+            est = (est_fn(chain) if est_fn is not None
+                   else {"device_blocks": 0, "blocks": 0, "bytes": 0,
+                         "restore_s": 0.0})
+            est["now"] = time.perf_counter()
+            return est
+        pf = getattr(eng, "prefetch_prefix", None)
+        rid = p.get("rid")
+        blocks = pf(chain, rid=int(rid) if rid is not None else None) \
+            if pf is not None else 0
+        return {"blocks": int(blocks), "now": time.perf_counter()}
 
     def _op_set_degraded(self, p: Dict) -> Dict:
         set_deg = getattr(self.engine, "set_degraded", None)
@@ -383,8 +410,14 @@ class EngineWorker:
                 "now": time.perf_counter()}
 
     def _op_hello(self, p: Dict) -> Dict:
+        # offload: duck-typed (a tiered cache carries a host store) so the
+        # fake engine stays import-light; the frontend uses the flag to
+        # skip prefetch/estimate RPCs entirely on un-tiered workers
         return {"pid": os.getpid(), "name": self.name,
                 "block_size": self.engine.ecfg.block_size,
+                "offload": getattr(
+                    getattr(self.engine, "cache", None), "host", None)
+                is not None,
                 "now": time.perf_counter()}
 
     def _op_shutdown(self, p: Dict) -> Dict:
@@ -396,6 +429,7 @@ class EngineWorker:
             "requeue": _op_requeue, "cancel": _op_cancel,
             "shed_expired": _op_shed_expired, "step": _op_step,
             "probe": _op_probe, "heartbeat": _op_heartbeat,
+            "prefetch": _op_prefetch,
             "set_degraded": _op_set_degraded, "stats": _op_stats,
             "shutdown": _op_shutdown}
 
