@@ -77,7 +77,7 @@ def _serve(cfg, params, trace, ecfg, reps=REPS, reset_cache=True,
                 ecfg.block_size)
         eng.hit_tokens = eng.total_tokens = eng.padded_slots = 0
         eng.packed_steps = eng.packed_requests = eng.steps = 0
-        eng.packed_hit_requests = 0
+        eng.packed_hit_requests = eng.pack_skew_splits = 0
         eng.results.clear()
         ids = []
         for r in trace.requests:
@@ -149,6 +149,126 @@ def run_prefix_hit(emit, smoke=False, cfg=None, params=None):
          f"(max score dev {max_dev:.2e})")
     return [("prefix_hit", tps_solo, tps_pack, s_solo["padding_waste"],
              s_pack["padding_waste"])]
+
+
+def _skewed_case(smoke=False):
+    """Skew-heavy mixed hit/miss trace (ISSUE 10 acceptance workload).
+
+    Per-user profile prefixes (~192 tokens, warmed on pass 0) carry MIXED
+    suffixes: mostly short (~18-26 tokens) plus a long tail (~176-208
+    tokens), with a few unshared pure-miss requests in between. The batched
+    hit path pads every co-packed row to (smax, pmax), so one long-suffix
+    hit admitted into a short-suffix pack re-prices every row ~8x — the
+    token-linear cost model can't see that (computed tokens barely move);
+    the shape-aware model prices the padding externality and skew-splits.
+    """
+    from repro.core.prefix_cache import token_chain
+    from repro.core.scheduler import Request
+    from repro.data.workloads import Trace
+
+    rng = np.random.default_rng(7)
+    users, shorts, longs = (4, 3, 1) if smoke else (6, 5, 2)
+    requests = []
+    for u in range(users):
+        profile = rng.integers(0, VOCAB, size=192).tolist()
+        sufs = ([int(rng.integers(18, 27)) for _ in range(shorts)]
+                + [int(rng.integers(176, 209)) for _ in range(longs)])
+        rng.shuffle(sufs)
+        for L in sufs:
+            tokens = profile + rng.integers(0, VOCAB, size=L).tolist()
+            requests.append(Request(n_input=len(tokens), arrival=0.0,
+                                    chain=token_chain(tokens, 16),
+                                    tokens=tokens))
+        # one unshared miss per user keeps mixed-kind packs in play
+        tokens = rng.integers(0, VOCAB, size=int(rng.integers(40, 61))).tolist()
+        requests.append(Request(n_input=len(tokens), arrival=0.0,
+                                chain=token_chain(tokens, 16),
+                                tokens=tokens))
+    return Trace(name="skewed_mixed", requests=requests)
+
+
+def run_pack_shape(emit, smoke=False, cfg=None, params=None):
+    """Shape-aware vs token-linear batch formation on the skewed trace.
+
+    Three arms over the identical trace: solo (max_pack_requests=1, the
+    score-parity reference), token-linear marginal admission
+    (``shape_cost_model=False`` — the legacy rule), and shape-aware marginal
+    admission + skew-split (the default). Gates: per-request score parity
+    < 2e-2 vs solo for BOTH packed arms; in full (non-smoke) runs the shape
+    arm must beat the linear arm on tokens/sec AND mean padding waste.
+    """
+    if cfg is None:
+        cfg = reduce_config(get_config(ARCH), hybrid_chunk=0)
+        api = build(cfg)
+        params = materialize(jax.random.PRNGKey(0), api.defs(), jnp.float32)
+    trace = _skewed_case(smoke)
+    tot = trace.total_tokens
+    reps = 8 if smoke else 10
+    solo_cfg = EngineConfig(max_pack_requests=1, cache_capacity_tokens=8192)
+    # generous budgets so admission is decided by the COST MODEL, not the
+    # hard gates — the arms differ only in shape_cost_model
+    linear_cfg = EngineConfig(pack_token_budget=512, max_pack_requests=8,
+                              pack_prefix_budget=8192,
+                              cache_capacity_tokens=8192,
+                              shape_cost_model=False)
+    shape_cfg = EngineConfig(pack_token_budget=512, max_pack_requests=8,
+                             pack_prefix_budget=8192,
+                             cache_capacity_tokens=8192,
+                             shape_cost_model=True)
+    t_solo, s_solo, sc_solo = _serve(cfg, params, trace, solo_cfg,
+                                     reps=reps, reset_cache=False,
+                                     allowed=YES_NO)
+    t_lin, s_lin, sc_lin = _serve(cfg, params, trace, linear_cfg,
+                                  reps=reps, reset_cache=False,
+                                  allowed=YES_NO)
+    t_shape, s_shape, sc_shape = _serve(cfg, params, trace, shape_cfg,
+                                        reps=reps, reset_cache=False,
+                                        allowed=YES_NO)
+    dev_lin = max(abs(a[t] - b[t])
+                  for a, b in zip(sc_solo, sc_lin) for t in a)
+    dev_shape = max(abs(a[t] - b[t])
+                    for a, b in zip(sc_solo, sc_shape) for t in a)
+    assert dev_lin < 2e-2, f"token-linear arm scores diverge: {dev_lin}"
+    assert dev_shape < 2e-2, f"shape-aware arm scores diverge: {dev_shape}"
+    tps_solo, tps_lin, tps_shape = tot / t_solo, tot / t_lin, tot / t_shape
+    emit("packing/pack_shape/solo", t_solo * 1e6,
+         f"{tps_solo:.0f}tok/s waste={s_solo['padding_waste']:.3f}")
+    emit("packing/pack_shape/token_linear", t_lin * 1e6,
+         f"{tps_lin:.0f}tok/s waste={s_lin['padding_waste']:.3f} "
+         f"packed={s_lin['packed_requests']}/{len(trace.requests)}")
+    emit("packing/pack_shape/shape_aware", t_shape * 1e6,
+         f"{tps_shape:.0f}tok/s waste={s_shape['padding_waste']:.3f} "
+         f"packed={s_shape['packed_requests']}/{len(trace.requests)} "
+         f"skew_splits={s_shape['pack_skew_splits']}")
+    emit("packing/pack_shape/speedup_vs_linear", 0.0,
+         f"{tps_shape / tps_lin:.2f}x tokens/sec, waste "
+         f"{s_lin['padding_waste']:.3f} -> {s_shape['padding_waste']:.3f} "
+         f"(score dev lin={dev_lin:.2e} shape={dev_shape:.2e})")
+    if not smoke:
+        assert tps_shape > tps_lin, (
+            f"shape-aware formation must beat token-linear: "
+            f"{tps_shape:.0f} <= {tps_lin:.0f} tok/s")
+        assert s_shape["padding_waste"] < s_lin["padding_waste"], (
+            f"shape-aware formation must waste less padding: "
+            f"{s_shape['padding_waste']:.3f} >= {s_lin['padding_waste']:.3f}")
+    return {"trace": {"name": trace.name, "requests": len(trace.requests),
+                      "total_tokens": tot},
+            "arms": {
+                "solo": {"tokens_per_sec": round(tps_solo, 1),
+                         "padding_waste": round(s_solo["padding_waste"], 4)},
+                "token_linear": {
+                    "tokens_per_sec": round(tps_lin, 1),
+                    "padding_waste": round(s_lin["padding_waste"], 4),
+                    "packed_requests": s_lin["packed_requests"],
+                    "score_dev_vs_solo": float(f"{dev_lin:.3e}")},
+                "shape_aware": {
+                    "tokens_per_sec": round(tps_shape, 1),
+                    "padding_waste": round(s_shape["padding_waste"], 4),
+                    "packed_requests": s_shape["packed_requests"],
+                    "pack_skew_splits": s_shape["pack_skew_splits"],
+                    "score_dev_vs_solo": float(f"{dev_shape:.3e}"),
+                    "shape_fit": s_shape["jct"].get("shape", {})}},
+            "speedup_shape_vs_linear": round(tps_shape / tps_lin, 3)}
 
 
 def run_traced_overhead(emit, smoke=False, cfg=None, params=None):
@@ -285,6 +405,10 @@ def main():
     ap.add_argument("--out", default=None,
                     help="write emitted rows to this file (default "
                          "benchmarks/results/packing_[smoke|prefix_hit].txt)")
+    ap.add_argument("--pack-shape", action="store_true",
+                    help="run ONLY the skewed-trace shape-aware-vs-linear "
+                         "formation case; writes BENCH_pack_shape.json "
+                         "(pack_shape_smoke.json with --smoke)")
     args = ap.parse_args()
     lines = ["name,us_per_call,derived"]
 
@@ -293,9 +417,33 @@ def main():
         print(line)
         lines.append(line)
 
+    from benchmarks.common import bench_record, write_bench_json
+
     cfg = reduce_config(get_config(ARCH), hybrid_chunk=0)
     api = build(cfg)
     params = materialize(jax.random.PRNGKey(0), api.defs(), jnp.float32)
+
+    if args.pack_shape:
+        result = run_pack_shape(emit, smoke=args.smoke, cfg=cfg,
+                                params=params)
+        out = args.out or (
+            "benchmarks/results/pack_shape_smoke.txt" if args.smoke
+            else "benchmarks/results/pack_shape.txt")
+        path = pathlib.Path(out)
+        path.parent.mkdir(parents=True, exist_ok=True)
+        path.write_text("\n".join(lines) + "\n")
+        print(f"wrote {path}")
+        record = bench_record(
+            "pack_shape",
+            config={"arch": ARCH, "smoke": args.smoke,
+                    "reps": 8 if args.smoke else 10,
+                    "trace": "skewed_mixed"},
+            **result)
+        jpath = ("benchmarks/results/pack_shape_smoke.json" if args.smoke
+                 else "benchmarks/results/BENCH_pack_shape.json")
+        write_bench_json(record, jpath)
+        return
+
     rows = run_prefix_hit(emit, smoke=args.smoke, cfg=cfg, params=params)
     overhead = run_traced_overhead(emit, smoke=args.smoke, cfg=cfg,
                                    params=params)
@@ -307,7 +455,6 @@ def main():
     path.write_text("\n".join(lines) + "\n")
     print(f"wrote {path}")
 
-    from benchmarks.common import bench_record, write_bench_json
     record = bench_record(
         "packing",
         config={"arch": ARCH, "smoke": args.smoke, "reps": 10,

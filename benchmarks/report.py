@@ -89,18 +89,24 @@ def trace_report(path):
         by_kind = defaultdict(list)
         for b in batches:
             by_kind[b.get("kind", "?")].append(b)
-        print("\n| pack class | steps | reqs | computed tok | waste | "
-              "compiles | mean wall |")
-        print("|---|---|---|---|---|---|---|")
+        print("\n| pack class | steps | reqs | computed tok | padded slots | "
+              "waste | mean waste/step | max smax/pmax | compiles | "
+              "mean wall |")
+        print("|---|---|---|---|---|---|---|---|---|---|")
         for kind in sorted(by_kind):
             bs = by_kind[kind]
             comp = sum(b["computed_tokens"] for b in bs)
             padded = sum(b["padded_tokens"] for b in bs)
             waste = 1.0 - comp / max(1, padded)
+            step_waste = (sum(b.get("padding_waste", 0.0) for b in bs)
+                          / len(bs))
             wall = sum(b["wall"] for b in bs) / len(bs)
+            smax = max(b.get("smax", 0) for b in bs)
+            pmax = max(b.get("pmax", 0) for b in bs)
             print(f"| {kind} | {len(bs)} | "
                   f"{sum(b['n_requests'] for b in bs)} | {comp} | "
-                  f"{waste:.3f} | "
+                  f"{padded} | {waste:.3f} | {step_waste:.3f} | "
+                  f"{smax}/{pmax} | "
                   f"{sum(1 for b in bs if b.get('compiled'))} | "
                   f"{wall*1e3:.1f}ms |")
 

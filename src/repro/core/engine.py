@@ -61,7 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
-from repro.core.jct import LinearProxyJCT, Sample
+from repro.core.jct import LinearProxyJCT, PackedShapeJCT, Sample
 from repro.core.kv_policy import KVLifecycle, bucket as _bucket
 from repro.core.offload import (HostKVStore, OffloadPolicy,
                                 TieredPrefixCache)
@@ -102,6 +102,14 @@ class EngineConfig:
     autotune_pack: bool = True         # retune both from the profile() fit
     pack_inflation: float = 2.0        # max anchor-step slowdown autotune
                                        # accepts vs a typical solo step
+    shape_cost_model: bool = True      # price batch formation with the
+                                       # shape-aware PackedShapeJCT (marginal
+                                       # padded-shape cost); False falls back
+                                       # to the token-linear proxy on the
+                                       # same marginal rule (benchmark arm)
+    shape_pad_discount: float = 0.25   # unfitted-prior rent per padded slot,
+                                       # as a fraction of the linear proxy's
+                                       # per-computed-token rate
     offload: bool = False              # DRAM tier: evicted prefix blocks
                                        # demote to a HostKVStore instead of
                                        # being discarded (paper §9)
@@ -152,6 +160,11 @@ class PrefillOnlyEngine:
                 ecfg.cache_capacity_tokens // ecfg.block_size,
                 ecfg.block_size)
         self.jct_model = LinearProxyJCT()
+        # shape-aware step pricing (ISSUE 10): batch formation admits by
+        # marginal padded-shape cost; routers/admission/Algorithm-1 keep the
+        # per-request linear proxy on the miss-token axis
+        self.shape_jct = PackedShapeJCT(
+            fallback=self.jct_model, pad_discount=ecfg.shape_pad_discount)
         # usable_prefix hook: Algorithm-1 scores must price requests against
         # the prefix a forward would actually reuse, matching the hit-aware
         # predict_jct/pending_jct/shed probes — not the raw token match
@@ -176,6 +189,10 @@ class PrefillOnlyEngine:
         self.packed_requests = 0       # requests served via prepacking
         self.packed_hit_requests = 0   # ...of which rode a cached prefix
         self.padded_slots = 0          # bucketed forward slots actually paid
+        self.pack_skew_splits = 0      # packs closed early because the best
+                                       # remaining candidate's padding
+                                       # externality exceeded its benefit
+        self._formed_cost = 0.0        # shape-priced cost of the last pack
         self._step_compiled = False    # step hit a fresh jit shape
         # result validation: a forward can emit non-finite logits (bad
         # checkpoint cast, accelerator fault) — such results are flagged
@@ -194,7 +211,8 @@ class PrefillOnlyEngine:
         # bind_telemetry(); unbound, the only cost is the ring append.
         self.batch_records: "deque[BatchRecord]" = deque(maxlen=256)
         self.jct_monitor = JCTCalibrationMonitor(
-            self.jct_model, buckets=ecfg.suffix_buckets)
+            self.jct_model, buckets=ecfg.suffix_buckets,
+            shape_model=self.shape_jct)
         self.metrics = None
         self.instance_name = ""
         self.tracer = None
@@ -528,9 +546,10 @@ class PrefillOnlyEngine:
             r.start_time = now
         with self.lock:
             self._inflight = [r.req_id for r in batch]
-            self._inflight_pred = sum(
-                self.jct_model.predict(r.n_input, self._usable_prefix(r))
-                for r in batch)
+            # the shape-priced cost of the formed pack — the watchdog
+            # deadline and BatchRecord.predicted_jct consume the same number
+            # batch formation admitted against
+            self._inflight_pred = self._formed_cost
             self._inflight_t0 = now
         self._step_compiled = False
         padded0 = self.padded_slots
@@ -605,11 +624,19 @@ class PrefillOnlyEngine:
         # they are excluded from the JCT fit: compile time is unbounded and
         # not a prediction error
         if not self._step_compiled:
-            self.jct_monitor.observe(pred, t_done - t0, computed)
+            self.jct_monitor.observe(pred, t_done - t0, computed, kind=kind)
+            # the shape model learns from the realized (shape, wall) pair —
+            # the same BatchRecord axes formation priced the pack on
+            self.shape_jct.observe(computed, rec.S, rec.Nb, rec.smax,
+                                   rec.pmax, rec.wall)
         m = self.metrics
         if m is not None:
             m.gauge("step_padding_waste", self.instance_name).set(
                 rec.padding_waste)
+            m.histogram("padding_waste", self.instance_name).observe(
+                rec.padding_waste)
+            m.counter("padded_slots", self.instance_name).inc(
+                rec.padded_tokens)
             m.counter(f"pack_{kind}_steps", self.instance_name).inc()
             m.histogram("batch_wall_seconds", self.instance_name).observe(
                 rec.wall)
@@ -670,37 +697,92 @@ class PrefillOnlyEngine:
             matched = self.cache.probe_blocks(r.chain)
         return self._usable_prefix_len(r.n_input, matched)
 
+    def _pack_shape(self, rows: List[Tuple[int, int]]) -> Tuple[
+            int, int, int, int, int]:
+        """Realized step shape ``(S, Nb, smax, pmax, pad_slots)`` for a pack
+        of ``rows`` = [(suffix_tokens, usable_prefix), ...].
+
+        Mirrors ``_execute_packed``'s layout arithmetic exactly so formation
+        prices the same shape execution will pay. A single row prices the
+        solo path: S = bucketed suffix, exact prefix buffer (Nb/smax = 0 by
+        the ``step_features`` canonicalization). ``pad_slots`` counts the
+        padded-but-dead slots a candidate's admission is charged for:
+        Σ(pmax−pref_i) + Σ(smax−suf_i) over the REAL rows packed, bucket
+        slack solo. The pow2 ghost rows (Nb−N) are deliberately not charged
+        here: they are a step-function layout artifact that would make
+        marginal admission oscillate at row-power boundaries — the fitted
+        model prices them from data (Nb is in its feature basis).
+        """
+        ecfg = self.ecfg
+        if len(rows) == 1:
+            suffix, pref = rows[0]
+            S = _bucket(suffix, ecfg.suffix_buckets)
+            return S, 0, 0, pref, S - suffix
+        suffixes = [s for s, _ in rows]
+        total = sum(suffixes)
+        S = _bucket(total, ecfg.suffix_buckets)
+        P_max = max(p for _, p in rows)
+        pmax = _bucket(P_max, ecfg.prefix_buckets) if P_max else 0
+        Nb = 1
+        while Nb < len(rows):
+            Nb *= 2
+        smax = _bucket(max(suffixes), (32, 48) + ecfg.suffix_buckets)
+        if not pmax:
+            # all-miss pack executes as ONE flat (1, S) sequence — no row
+            # padding; only the bucket slack is dead
+            return S, Nb, smax, 0, S - total
+        pad = (sum(pmax - p for _, p in rows)
+               + sum(smax - s for s in suffixes))
+        return S, Nb, smax, pmax, pad
+
+    def _pack_cost(self, rows: List[Tuple[int, int]]) -> float:
+        """Predicted wall seconds for one step over ``rows``.
+
+        ``shape_cost_model=False`` keeps the legacy token-linear pricing
+        (cost depends only on bucketed computed tokens) — the marginal admit
+        rule then reduces exactly to the old
+        ``jct(bucket(total+suffix)) <= jct(bucket(total)) + jct(bucket(suffix))``
+        inequality, which is the benchmark's comparison arm.
+        """
+        computed = sum(s for s, _ in rows)
+        if not self.ecfg.shape_cost_model:
+            return self.jct_model.predict(
+                _bucket(computed, self.ecfg.suffix_buckets))
+        S, Nb, smax, pmax, pad = self._pack_shape(rows)
+        return self.shape_jct.predict(computed, S, Nb, smax, pmax,
+                                      pad_slots=pad)
+
     def _form_batch(self, now: float) -> Optional[List[Request]]:
-        """Algorithm 1 pick + cost-modeled first-fit-decreasing backfill.
+        """Algorithm 1 pick + marginal-cost backfill (shape-priced).
 
         The anchor is exactly the scheduler's pick, so SRJF-calibrated order
-        is preserved. Backfill packs further requests into the anchor's
-        forward, largest COMPUTED-token count first (FFD maximizes bucket
-        fill): cache misses contribute their full length, cache hits only
-        their suffix — hit segments attend their cached prefix KV through
-        the gathered prefix buffer (packed prefix-hit path), so hit anchors
-        are backfillable and hit candidates co-pack.
+        is preserved. Backfill then grows the pack greedily: every queued
+        candidate is priced by its MARGINAL shape-aware batch cost
+        ``cost(pack + r) − cost(pack)`` against its solo cost, and the
+        scheduler's ``pick_backfill`` admits the candidate with the largest
+        benefit ``solo(r) − marginal(r)``. Cache misses contribute their
+        full length, cache hits only their suffix — hit segments attend
+        their cached prefix KV through the gathered prefix buffer, so hit
+        anchors are backfillable and hit candidates co-pack.
 
-        Per candidate a small cost model chooses between {co-pack, later
-        solo-suffix run}: admit only when
-        ``jct(bucket(total+suffix)) <= jct(bucket(total)) + jct(bucket(suffix))``
-        — the packed-step estimate on bucketed forward sizes beats running
-        the candidate sequentially (bucketing makes this non-trivial: a
-        candidate that tips the forward into the next bucket can lose).
-        Budgets: computed tokens <= ``pack_token_budget``; gathered prefix
-        tokens <= ``pack_prefix_budget``. The token-linear fit cannot see
-        the batched hit forward's row padding, so two shape guards back it
-        up: candidates are ordered by prefix class (same-pmax rows pad
-        least), and a candidate that would raise the batch's prefix bucket
-        beyond 2x its current class — or whose prefix dwarfs the batch's
-        computed tokens — is left for its own step.
+        ``cost`` is the PackedShapeJCT prediction over the realized padded
+        shape (S, Nb, smax, pmax): a long-prefix or long-suffix row that
+        re-prices every already-admitted row's padding shows up as a large
+        marginal and is rejected by PRICE — this replaces the old
+        ``pb > 2*pmax_b`` / ``pref > 4*(total+suffix)`` heuristic blowup
+        gates. When the best remaining candidate's benefit is negative the
+        pack CLOSES (skew split, counted in ``pack_skew_splits``): the
+        rejected candidates stay queued and seed the next step's low-skew
+        pack instead of inflating this one.
 
-        Requests sharing a prefix root (same first hash-chain block) co-pack
-        ONLY when both sides already hit the cache (each attends its own
-        gathered copy of the shared KV). A miss sharing a root still runs
-        sequentially, so the later request hits the earlier one's freshly
-        inserted KV — that reuse beats any packing win (BatchLLM's
-        global-prefix observation).
+        Hard gates (not priced): computed tokens <= ``pack_token_budget``;
+        gathered prefix tokens <= ``pack_prefix_budget``; brownout skips hit
+        gathers. Requests sharing a prefix root (same first hash-chain
+        block) co-pack ONLY when both sides already hit the cache (each
+        attends its own gathered copy of the shared KV). A miss sharing a
+        root still runs sequentially, so the later request hits the earlier
+        one's freshly inserted KV — that reuse beats any packing win
+        (BatchLLM's global-prefix observation).
         """
         with self.lock:
             i = self.scheduler.pick(self.queue, self.cache, now)
@@ -709,70 +791,60 @@ class PrefillOnlyEngine:
             anchor = self.queue.pop(i)
             batch = [anchor]
             ecfg = self.ecfg
-            if (ecfg.max_pack_requests <= 1 or ecfg.pack_token_budget <= 0
-                    or not self.queue):
-                return batch
-            m = self.jct_model
-            buckets = ecfg.suffix_buckets
             pref_a = self._usable_prefix(anchor)
-            if self.degraded and pref_a:
+            rows = [(anchor.n_input - pref_a, pref_a)]
+            if (ecfg.max_pack_requests <= 1 or ecfg.pack_token_budget <= 0
+                    or not self.queue or (self.degraded and pref_a)):
                 # brownout: a hit anchor runs the cheap solo-suffix path
                 # instead of anchoring a batched gathered-prefix forward
+                self._formed_cost = self._pack_cost(rows)
                 return batch
-            total = anchor.n_input - pref_a        # computed suffix tokens
+            total = rows[0][0]                     # computed suffix tokens
             pref_total = pref_a
             hit_roots = ({anchor.chain[0]: pref_a > 0} if anchor.chain
                          else {})
             # one cache walk per candidate (the same O(chain) walk pick()
-            # already paid this step) — suffix lengths drive both the FFD
-            # order and the budget, so they must be known up front.
-            # Order: prefix length desc FIRST, then suffix desc (FFD). The
-            # batched hit forward pads every row to the batch's max
-            # (smax, pmax), so grouping candidates of the same prefix class
-            # minimizes row padding; misses (prefix 0) group last.
+            # already paid this step) — suffix lengths drive the budget
+            # gates and the shape pricing, so they must be known up front
             cands = [(r, self._usable_prefix(r)) for r in self.queue]
-            cands.sort(key=lambda rp: (-rp[1],
-                                       -(rp[0].n_input - rp[1]),
-                                       rp[0].arrival, rp[0].req_id))
-            # batched-hit rows all pad to the batch's max prefix bucket, a
-            # cost the token-linear JCT fit never sees — track it and gate
-            # candidates that would blow it up for every row
-            pmax_b = _bucket(pref_a, ecfg.prefix_buckets) if pref_a else 0
-            for r, pref in cands:
-                if len(batch) >= ecfg.max_pack_requests:
-                    break
+            pack_cost = self._pack_cost(rows)
+
+            def benefit(r: Request, pref: int) -> Optional[float]:
                 if self.degraded and pref:
-                    continue       # brownout: no batched hit gather
+                    return None    # brownout: no batched hit gather
                 suffix = r.n_input - pref
                 if total + suffix > ecfg.pack_token_budget:
-                    continue
+                    return None
                 if pref and pref_total + pref > ecfg.pack_prefix_budget:
-                    continue
-                pb = _bucket(pref, ecfg.prefix_buckets) if pref else 0
-                if pb > pmax_b:
-                    # raising pmax re-prices every row's prefix attention:
-                    # allow at most one ladder-ish step over the current
-                    # class, and never a prefix that dwarfs the batch's
-                    # computed work (attended tokens are cheap, not free)
-                    if pmax_b and pb > 2 * pmax_b:
-                        continue
-                    if pref > 4 * (total + suffix):
-                        continue
+                    return None
                 root = r.chain[0] if r.chain else None
                 if root is not None and root in hit_roots and not (
                         hit_roots[root] and pref > 0):
-                    continue
-                pack_est = m.predict(_bucket(total + suffix, buckets))
-                seq_est = (m.predict(_bucket(total, buckets))
-                           + m.predict(_bucket(suffix, buckets)))
-                if pack_est > seq_est:
-                    continue
+                    return None
+                marginal = self._pack_cost(rows + [(suffix, pref)]) - pack_cost
+                return self._pack_cost([(suffix, pref)]) - marginal
+
+            while len(batch) < ecfg.max_pack_requests and cands:
+                j = self.scheduler.pick_backfill(cands, benefit)
+                if j is None:
+                    break
+                r, pref = cands[j]
+                if benefit(r, pref) < 0:
+                    # the BEST remaining candidate would cost more in this
+                    # pack than solo: its padding externality on admitted
+                    # rows exceeds the co-packing gain — close the pack
+                    self.pack_skew_splits += 1
+                    break
+                cands.pop(j)
                 batch.append(r)
-                total += suffix
+                rows.append((r.n_input - pref, pref))
+                total += r.n_input - pref
                 pref_total += pref
-                pmax_b = max(pmax_b, pb)
+                pack_cost = self._pack_cost(rows)
+                root = r.chain[0] if r.chain else None
                 if root is not None:
                     hit_roots.setdefault(root, pref > 0)
+            self._formed_cost = pack_cost
             for r in batch[1:]:
                 self.queue.remove(r)
             return batch
@@ -903,22 +975,17 @@ class PrefillOnlyEngine:
                 self.total_tokens += r.n_input
         suffixes = [r.n_input - p for r, (p, _, _) in zip(batch, prefs)]
         total = sum(suffixes)
-        S = _bucket(total, self.ecfg.suffix_buckets)
-        P_max = max(p for p, _, _ in prefs)
-        # per-SEGMENT prefix pad (the hit forward is batched over segments);
-        # coarse ladder: the key space is a product of ladders and batch
+        # realized step shape — the SAME arithmetic batch formation priced
+        # the pack with (_pack_shape): per-segment prefix pad on a coarse
+        # ladder (the jit key space is a product of ladders and batch
         # composition shifts step to step, so pmax must quantize hard or
-        # steady state keeps compiling
-        pmax = _bucket(P_max, self.ecfg.prefix_buckets) if P_max else 0
-        # batch rows padded to a power of two for the same reason
-        Nb = 1
-        while Nb < N:
-            Nb *= 2
-        # sub-bucket smax floor: hit suffixes are typically a few tens of
-        # tokens (prefix-granularity remainder), and the batched attention's
-        # dominant einsum scales with smax — padding 34 real tokens to the
-        # 64-token forward bucket would burn ~2x there
-        smax = _bucket(max(suffixes), (32, 48) + self.ecfg.suffix_buckets)
+        # steady state keeps compiling); rows padded to a power of two;
+        # sub-bucket smax floor (hit suffixes are typically a few tens of
+        # tokens and the batched attention's dominant einsum scales with
+        # smax — padding 34 real tokens to the 64-token forward bucket
+        # would burn ~2x there)
+        S, Nb, smax, pmax, _ = self._pack_shape(
+            [(r.n_input - p, p) for r, (p, _, _) in zip(batch, prefs)])
         # block-aligned NEW keep per request (only whole blocks are
         # insertable; a hit's cached prefix already covers its first
         # blocks). A chain already resident past its keep bound needs NO
@@ -969,7 +1036,12 @@ class PrefillOnlyEngine:
             off += L
             cum += keeps[n]
         last_idx[N:] = last_idx[N - 1]
-        self.padded_slots += Nb * pmax + S
+        # paid forward slots: the flat packed sequence S plus, on the hit
+        # path, the per-row padded area the batched attention actually
+        # computes over — Nb*pmax prefix slots AND the row slack
+        # Nb*smax − S (a skewed pack's dominant waste term)
+        self.padded_slots += S + Nb * pmax + (
+            max(0, Nb * smax - S) if pmax else 0)
         self._last_shape = {"S": S, "Nb": Nb if pmax else 0, "smax": smax,
                             "pmax": pmax, "K": K}
         if pmax:
@@ -1146,6 +1218,7 @@ class PrefillOnlyEngine:
             "packed_steps": self.packed_steps,
             "packed_requests": self.packed_requests,
             "packed_hit_requests": self.packed_hit_requests,
+            "pack_skew_splits": self.pack_skew_splits,
             "nonfinite_results": self.nonfinite_results,
             # fraction of paid forward slots that were padding/cache slack
             "padding_waste": 1.0 - (self.total_tokens

@@ -483,8 +483,12 @@ class JCTCalibrationMonitor:
     def __init__(self, model, buckets: Sequence[int] = (),
                  window: int = 32, per_bucket: int = 128,
                  drift_threshold: float = 0.5, drift_min: int = 8,
-                 cooldown: int = 16):
+                 cooldown: int = 16, shape_model=None):
         self.model = model
+        # optional PackedShapeJCT riding along: its residuals are tracked
+        # per PACK CLASS (solo/miss/hit — the three step layouts it prices)
+        # and a drift event refits it from its own shape-sample window too
+        self.shape_model = shape_model
         self.buckets = tuple(sorted(buckets))
         self.window = window
         self.drift_threshold = drift_threshold
@@ -494,6 +498,7 @@ class JCTCalibrationMonitor:
         self.observed = 0
         self._recent_rel: deque = deque(maxlen=window)
         self._by_bucket: Dict[int, deque] = {}
+        self._by_class: Dict[str, deque] = {}
         self._per_bucket = per_bucket
         self._since_refit = 0
         self._lock = threading.Lock()
@@ -523,8 +528,17 @@ class JCTCalibrationMonitor:
         m.gauge("jct_pearson_r", inst).set(getattr(model, "pearson_r", 0.0))
         m.gauge("jct_refits", inst).set(
             getattr(model, "fits", 0) + self.drift_refits)
+        m.gauge("jct_fit_clamped", inst).set(
+            getattr(model, "clamped_fits", 0))
+        sm = self.shape_model
+        if sm is not None:
+            for name, c in sm.coefficients().items():
+                m.gauge(f"jct_shape_{name}", inst).set(c)
+            m.gauge("jct_shape_pearson_r", inst).set(sm.pearson_r)
+            m.gauge("jct_shape_refits", inst).set(sm.fits)
 
-    def observe(self, predicted: float, actual: float, tokens: int) -> None:
+    def observe(self, predicted: float, actual: float, tokens: int,
+                kind: str = None) -> None:
         resid = actual - predicted
         rel = abs(resid) / max(abs(actual), 1e-9)
         bucket = self._bucket(tokens)
@@ -535,6 +549,12 @@ class JCTCalibrationMonitor:
             if dq is None:
                 dq = self._by_bucket[bucket] = deque(maxlen=self._per_bucket)
             dq.append(resid)
+            if kind is not None:
+                cq = self._by_class.get(kind)
+                if cq is None:
+                    cq = self._by_class[kind] = deque(
+                        maxlen=self._per_bucket)
+                cq.append(resid)
             self._recent_rel.append(rel)
             self._since_refit += 1
             if (len(self._recent_rel) >= self.drift_min
@@ -551,11 +571,16 @@ class JCTCalibrationMonitor:
             recent = getattr(self.model, "_recent", None)
             if recent and len(recent) >= 4:
                 self.model.fit(list(recent))
+            if self.shape_model is not None:
+                self.shape_model.refit_recent()
         m = self._metrics
         if m is not None:
             inst = self._instance
             m.histogram("jct_residual_seconds", inst).observe(abs(resid))
             m.histogram("jct_relative_error", inst).observe(rel)
+            if kind is not None:
+                m.histogram(f"jct_residual_{kind}_seconds", inst).observe(
+                    abs(resid))
             if drifted:
                 m.counter("jct_drift_refits", inst).inc()
             self._export_coefficients()
@@ -572,20 +597,35 @@ class JCTCalibrationMonitor:
                     "p95_abs": float(np.percentile(np.abs(list(dq)), 95))
                     if dq else 0.0}
                 for b, dq in sorted(self._by_bucket.items())}
+            by_class = {
+                k: {"count": len(dq),
+                    "mean_abs": float(np.mean(np.abs(dq))) if dq else 0.0,
+                    "p95_abs": float(np.percentile(np.abs(list(dq)), 95))
+                    if dq else 0.0}
+                for k, dq in sorted(self._by_class.items())}
             drift = self.drift_refits
             observed = self.observed
         absr = np.abs(all_resid) if all_resid else None
         model = self.model
-        return {
+        out = {
             "a": float(getattr(model, "a", 0.0)),
             "b": float(getattr(model, "b", 0.0)),
             "pearson_r": float(getattr(model, "pearson_r", 0.0)),
             "observed": observed,
             "refits": int(getattr(model, "fits", 0)),
+            "clamped_fits": int(getattr(model, "clamped_fits", 0)),
             "drift_refits": drift,
             "residual_p50": float(np.percentile(absr, 50))
             if absr is not None else 0.0,
             "residual_p95": float(np.percentile(absr, 95))
             if absr is not None else 0.0,
             "by_bucket": by_bucket,
+            "by_class": by_class,
         }
+        if self.shape_model is not None:
+            sm = self.shape_model
+            out["shape"] = {"coef": sm.coefficients(),
+                            "pearson_r": float(sm.pearson_r),
+                            "refits": int(sm.fits),
+                            "fitted": bool(sm.fitted)}
+        return out

@@ -466,8 +466,10 @@ def test_long_prefix_candidate_does_not_inflate_batch_pmax(setup):
     b = eng.submit(small + rng.integers(0, cfg.vocab_size, 24).tolist())
     c = eng.submit(big + rng.integers(0, cfg.vocab_size, 20).tolist())
     eng.run_until_drained()
-    # the two small-prefix hits co-pack; the 640-token-prefix hit (bucket
-    # 1024 > 2 * bucket(64), and 640 > 4x the computed tokens) runs alone
+    # the two small-prefix hits co-pack; the 640-token-prefix hit runs
+    # alone — admitting it would raise pmax to 1024 for every row, and the
+    # shape model's marginal price for that padding exceeds its solo cost
+    # (the priced rule that replaced the old pb > 2*pmax_b heuristic)
     assert eng.packed_steps == 1
     assert eng.packed_hit_requests == 2
     assert a in eng.results and b in eng.results and c in eng.results

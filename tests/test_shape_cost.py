@@ -1,0 +1,332 @@
+"""Shape-aware packed-batch cost model (ISSUE 10): PackedShapeJCT fit and
+prior, priced marginal-cost batch formation + skew splitting, the
+pick_backfill scheduler hook, per-pack-class calibration residuals, and the
+satellite JCT-model fixes (pearson on degenerate input, clamped-fit counter,
+GridJCT / RooflineJCT coverage)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduce_config
+from repro.core.engine import EngineConfig, PrefillOnlyEngine
+from repro.core.jct import (GridJCT, LinearProxyJCT, PackedShapeJCT,
+                            RooflineJCT, SHAPE_FEATURES,
+                            _causal_context_sum, pearson, step_features,
+                            tp_comm_bytes_per_token)
+from repro.core.scheduler import Request, Scheduler
+from repro.models.model import build
+from repro.runtime.sharding import materialize
+from repro.serving.metrics import MetricsRegistry
+from repro.serving.tracing import JCTCalibrationMonitor
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = reduce_config(get_config("qwen1.5-0.5b"), hybrid_chunk=0)
+    api = build(cfg)
+    params = materialize(jax.random.PRNGKey(0), api.defs(), jnp.float32)
+    return cfg, params
+
+
+# --------------------------------------------------------------------------
+# satellite fixes: pearson degenerate input, clamped-fit counter
+# --------------------------------------------------------------------------
+
+def test_pearson_zero_variance_returns_zero():
+    """A degenerate fit must not report perfect correlation to the
+    jct_pearson_r gauge."""
+    assert pearson([5.0, 5.0, 5.0], [1.0, 2.0, 3.0]) == 0.0
+    assert pearson([1.0, 2.0, 3.0], [7.0, 7.0, 7.0]) == 0.0
+    assert pearson([1.0], [1.0]) == 0.0
+    assert pearson([], []) == 0.0
+    # non-degenerate input still correlates
+    assert pearson([1.0, 2.0, 3.0], [2.0, 4.0, 6.0]) == pytest.approx(1.0)
+
+
+def test_linear_fit_counts_clamped_intercepts():
+    """fit() clamps a negative intercept to 0 — silently, before this
+    counter: calibration drift from a mis-specified model must be visible."""
+    m = LinearProxyJCT()
+    assert m.clamped_fits == 0
+    # perfectly linear data with a POSITIVE intercept: no clamp
+    m.fit([(n, 0, 1e-4 * n + 0.05) for n in range(100, 1000, 100)])
+    assert m.clamped_fits == 0
+    # data whose least-squares intercept is negative: clamped and counted
+    m.fit([(n, 0, 2e-4 * n - 0.05) for n in range(1000, 9000, 1000)])
+    assert m.clamped_fits == 1
+    assert m.b == 0.0
+
+
+# --------------------------------------------------------------------------
+# satellite coverage: GridJCT / RooflineJCT / helpers
+# --------------------------------------------------------------------------
+
+def test_grid_jct_fit_predict_roundtrip():
+    """GridJCT recovers a planted bilinear+quadratic cost surface."""
+    def true_jct(n, c):
+        return 0.01 + 3e-5 * (n - c) + 1e-6 * c + 2e-3 * (n**2 - c**2) * 1e-6
+
+    samples = [(n, c, true_jct(n, c))
+               for n in range(1000, 16000, 1000) for c in (0, n // 4, n // 2)]
+    g = GridJCT().fit(samples)
+    for n, c in ((2500, 0), (7000, 3500), (15000, 7000)):
+        assert g.predict(n, c) == pytest.approx(true_jct(n, c), rel=1e-6)
+
+
+def test_roofline_jct_monotone_and_hit_discount():
+    """More miss tokens cost more; a cached prefix strictly discounts."""
+    cfg = get_config("qwen1.5-0.5b")
+    r = RooflineJCT(cfg)
+    assert r.predict(4000) > r.predict(2000) > 0
+    assert r.predict(4000, 2000) < r.predict(4000)
+    # the profile grid covers every (n, c) pair at the grid granularity
+    grid = r.samples(3000, granularity=1000)
+    assert len(grid) == 1 + 2 + 3
+    assert all(t > 0 for _, _, t in grid)
+
+
+def test_causal_context_sum_arithmetic():
+    """Closed-form vs brute force over full/windowed/local-global cases."""
+    def brute(n_input, n_cached, window, local_global=False):
+        total = 0.0
+        for i in range(n_cached, n_input):
+            full = i + 1
+            win = min(i + 1, window) if window else full
+            if local_global:
+                total += 0.5 * (full + win)
+            elif window:
+                total += win
+            else:
+                total += full
+        return total
+
+    for n, c in ((10, 0), (10, 4), (100, 37)):
+        assert _causal_context_sum(n, c, 0) == brute(n, c, 0)
+        for w in (3, 8, 50, 200):
+            assert _causal_context_sum(n, c, w) == brute(n, c, w)
+            assert _causal_context_sum(n, c, w, local_global=True) == \
+                brute(n, c, w, local_global=True)
+
+
+def test_tp_comm_bytes_per_token():
+    cfg = get_config("qwen1.5-0.5b")
+    assert tp_comm_bytes_per_token(cfg, 1) == 0.0
+    payload = 2 * cfg.num_layers * cfg.d_model * 2
+    assert tp_comm_bytes_per_token(cfg, 2) == pytest.approx(1.0 * payload)
+    assert tp_comm_bytes_per_token(cfg, 4) == pytest.approx(1.5 * payload)
+    # ring all-reduce cost saturates at 2x payload as k grows
+    assert tp_comm_bytes_per_token(cfg, 64) < 2.0 * payload
+
+
+# --------------------------------------------------------------------------
+# PackedShapeJCT: canonical features, prior, NNLS fit
+# --------------------------------------------------------------------------
+
+def test_step_features_canonicalize_step_kinds():
+    """Solo-miss, solo-suffix, and packed shapes land on one feature basis
+    so formation-time pricing matches BatchRecord observations."""
+    # fresh solo: no rows, no padded dims
+    f = step_features(60, 64, 0, 0, 0)
+    assert f[1:] == (60.0, 64.0, 0.0, 0.0, 0.0)
+    # solo-suffix: one implicit row of (S, exact prefix)
+    f = step_features(36, 64, 0, 0, 128)
+    assert f[3] == 64.0            # row_tokens = 1 * S
+    assert f[4] == 128.0           # prefix_slots = 1 * pref
+    # packed hit: Nb rows padded to (smax, pmax)
+    f = step_features(100, 128, 4, 48, 256)
+    assert f[3] == 4 * 48 and f[4] == 4 * 256
+    assert f[5] == pytest.approx(4 * 48 * (48 + 256) * 1e-6)
+
+
+def test_packed_shape_fit_recovers_nonnegative_coefficients():
+    """NNLS over synthetic shaped steps recovers the planted rates; all
+    coefficients stay >= 0 so marginal pack costs are monotone."""
+    rng = np.random.default_rng(0)
+    m = PackedShapeJCT(min_samples=8)
+    a_c, a_row, a_pref = 1e-4, 2e-5, 1e-5
+    for _ in range(64):
+        Nb = int(rng.choice([1, 2, 4, 8]))
+        smax = int(rng.choice([32, 48, 64]))
+        pmax = int(rng.choice([0, 128, 256]))
+        comp = int(rng.integers(32, 512))
+        S = comp
+        wall = (0.01 + a_c * comp + a_row * Nb * smax + a_pref * Nb * pmax)
+        m.observe(comp, S, Nb, smax, pmax, wall)
+    m.refit_recent()
+    assert m.fitted
+    assert all(c >= 0.0 for c in m.coef)
+    pred = m.predict(256, 256, 4, 64, 256)
+    want = 0.01 + a_c * 256 + a_row * 4 * 64 + a_pref * 4 * 256
+    assert pred == pytest.approx(want, rel=0.15)
+    assert set(m.coefficients()) == set(SHAPE_FEATURES)
+
+
+def test_packed_shape_prior_charges_padding():
+    """Before enough warm samples, the prior prices computed tokens at the
+    linear proxy's rate plus a discounted rent on padded slots."""
+    fb = LinearProxyJCT(a=1e-4, b=0.01)
+    m = PackedShapeJCT(fallback=fb, pad_discount=0.25)
+    assert not m.fitted
+    # no padding: exactly the linear proxy
+    assert m.predict(64, 64, 0, 0, 0, pad_slots=0) == pytest.approx(
+        1e-4 * 64 + 0.01)
+    # 100 padded slots at 0.25 * a
+    assert m.predict(64, 64, 2, 48, 128, pad_slots=100) == pytest.approx(
+        1e-4 * (64 + 25) + 0.01)
+
+
+# --------------------------------------------------------------------------
+# scheduler hook
+# --------------------------------------------------------------------------
+
+def test_pick_backfill_prefers_largest_benefit():
+    sched = Scheduler("fifo", LinearProxyJCT())
+    rs = [Request(n_input=64, arrival=float(i)) for i in range(4)]
+    cands = [(r, 0) for r in rs]
+    gains = {rs[0].req_id: 1.0, rs[1].req_id: 3.0,
+             rs[2].req_id: None, rs[3].req_id: 3.0}
+    picked = sched.pick_backfill(cands, lambda r, p: gains[r.req_id])
+    assert picked == 1                 # largest benefit, earliest arrival
+    # all ineligible -> None
+    assert sched.pick_backfill(cands, lambda r, p: None) is None
+    # negative benefits are still RETURNED (caller decides to close)
+    assert sched.pick_backfill(cands, lambda r, p: -1.0) == 0
+
+
+# --------------------------------------------------------------------------
+# engine: priced marginal admission replaces the magic pmax gate
+# --------------------------------------------------------------------------
+
+def _warm_two_prefixes(cfg, params, rng, small_len=64, big_len=640):
+    small = rng.integers(0, cfg.vocab_size, small_len).tolist()
+    big = rng.integers(0, cfg.vocab_size, big_len).tolist()
+    eng = PrefillOnlyEngine(cfg, params, EngineConfig(
+        pack_token_budget=512, pack_prefix_budget=10**6,
+        cache_capacity_tokens=32768))
+    eng.submit(small)
+    eng.submit(big)
+    eng.run_until_drained()
+    return eng, small, big
+
+
+def test_long_prefix_rejected_by_price_not_constant(setup):
+    """The old ``pb > 2*pmax_b`` heuristic is gone: the same long-prefix
+    candidate is admitted or rejected purely by the shape model's marginal
+    price. With prefix slots priced FREE it co-packs; with the real
+    (positive) prefix rate it is left for its own step."""
+    cfg, params = setup
+    rng = np.random.default_rng(23)
+    eng, small, big = _warm_two_prefixes(cfg, params, rng)
+    # force a FITTED shape model whose prefix_slots rate is zero: prefix
+    # padding costs nothing, so price-based admission must now accept the
+    # 640-token-prefix candidate the old magic gate would have rejected
+    eng.shape_jct.coef = np.array([5e-3, 1e-5, 0.0, 0.0, 0.0, 0.0])
+    eng.shape_jct.fits = 1
+    eng.shape_jct.window = 0           # keep observe() from refitting
+    eng.shape_jct.refit_every = 10**9
+    a = eng.submit(small + rng.integers(0, cfg.vocab_size, 20).tolist())
+    b = eng.submit(small + rng.integers(0, cfg.vocab_size, 24).tolist())
+    c = eng.submit(big + rng.integers(0, cfg.vocab_size, 20).tolist())
+    eng.run_until_drained()
+    assert eng.packed_hit_requests == 3, \
+        "prefix-free pricing must admit the long-prefix candidate"
+
+    # same workload, same fitted model but with a REAL prefix_slots rate:
+    # raising pmax to 1024 re-prices every row, the marginal exceeds the
+    # candidate's solo cost, and the pack closes without it
+    eng2, small2, big2 = _warm_two_prefixes(cfg, params, rng)
+    eng2.shape_jct.coef = np.array([5e-3, 1e-5, 0.0, 0.0, 1e-5, 0.0])
+    eng2.shape_jct.fits = 1
+    eng2.shape_jct.window = 0
+    eng2.shape_jct.refit_every = 10**9
+    eng2.submit(small2 + rng.integers(0, cfg.vocab_size, 20).tolist())
+    eng2.submit(small2 + rng.integers(0, cfg.vocab_size, 24).tolist())
+    eng2.submit(big2 + rng.integers(0, cfg.vocab_size, 20).tolist())
+    splits0 = eng2.pack_skew_splits
+    eng2.run_until_drained()
+    assert eng2.packed_hit_requests == 2, \
+        "priced prefix padding must reject the long-prefix candidate"
+    assert eng2.pack_skew_splits > splits0, \
+        "rejecting the best remaining candidate is a skew split"
+
+
+def test_skew_split_closes_pack_and_requeues(setup):
+    """When the best remaining candidate prices negative, the pack closes
+    (counted) and the candidate is served in a later step, not dropped."""
+    cfg, params = setup
+    rng = np.random.default_rng(29)
+    eng, small, big = _warm_two_prefixes(cfg, params, rng)
+    eng.shape_jct.coef = np.array([5e-3, 1e-5, 0.0, 0.0, 1e-5, 0.0])
+    eng.shape_jct.fits = 1
+    eng.shape_jct.window = 0
+    eng.shape_jct.refit_every = 10**9
+    steps0 = eng.steps
+    ids = [eng.submit(small + rng.integers(0, cfg.vocab_size, 20).tolist()),
+           eng.submit(big + rng.integers(0, cfg.vocab_size, 20).tolist())]
+    done = eng.run_until_drained()
+    assert sorted(done) == sorted(ids)             # nothing dropped
+    assert eng.pack_skew_splits >= 1
+    assert eng.steps == steps0 + 2                 # split into two steps
+    assert eng.stats()["pack_skew_splits"] == eng.pack_skew_splits
+
+
+def test_formed_cost_feeds_predicted_jct(setup):
+    """BatchRecord.predicted_jct (and the watchdog's inflight prediction)
+    must be the shape-priced cost the pack was ADMITTED against."""
+    cfg, params = setup
+    rng = np.random.default_rng(31)
+    eng = PrefillOnlyEngine(cfg, params, EngineConfig(pack_token_budget=512))
+    eng.submit(rng.integers(0, cfg.vocab_size, 60).tolist())
+    eng.submit(rng.integers(0, cfg.vocab_size, 40).tolist())
+    eng.step()
+    rec = eng.batch_records[-1]
+    rows = [(100, 0)]
+    # two misses co-pack into one flat 100-token step: predicted_jct is the
+    # shape model's price for that realized shape
+    assert rec.n_requests == 2
+    assert rec.predicted_jct == pytest.approx(eng._pack_cost(rows))
+
+
+# --------------------------------------------------------------------------
+# calibration monitor: per-pack-class residuals + new gauges
+# --------------------------------------------------------------------------
+
+def test_monitor_tracks_residuals_per_pack_class():
+    model = LinearProxyJCT()
+    shape = PackedShapeJCT(fallback=model)
+    mon = JCTCalibrationMonitor(model, buckets=(64, 256),
+                                shape_model=shape)
+    reg = MetricsRegistry()
+    mon.bind(reg, "t")
+    mon.observe(0.010, 0.012, 60, kind="solo")
+    mon.observe(0.020, 0.025, 200, kind="hit")
+    mon.observe(0.020, 0.021, 200, kind="hit")
+    s = mon.summary()
+    assert s["by_class"]["solo"]["count"] == 1
+    assert s["by_class"]["hit"]["count"] == 2
+    assert s["by_class"]["hit"]["mean_abs"] == pytest.approx(0.003)
+    # shape-model block rides along in the summary
+    assert "shape" in s and s["shape"]["fitted"] is False
+    text = reg.render()
+    assert "jct_residual_hit_seconds" in text
+    assert "jct_fit_clamped" in text
+    assert "jct_shape_computed" in text
+
+
+def test_monitor_drift_refits_shape_model():
+    model = LinearProxyJCT(a=1e-6, b=0.0)     # badly mis-fitted on purpose
+    model.refit_every = 10**9
+    shape = PackedShapeJCT(fallback=model, min_samples=4,
+                           refit_every=10**9)
+    mon = JCTCalibrationMonitor(model, window=8, drift_threshold=0.5,
+                                drift_min=4, cooldown=4, shape_model=shape)
+    rng = np.random.default_rng(3)
+    for i in range(16):
+        n = int(rng.integers(64, 512))
+        actual = 1e-4 * n + 0.01
+        model.observe(n, 0, actual)
+        shape.observe(n, n, 0, 0, 0, actual)
+        mon.observe(model.predict(n), actual, n, kind="miss")
+    assert mon.drift_refits >= 1
+    assert shape.fits >= 1, "drift must refit the shape model too"
